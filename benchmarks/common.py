@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call of a jitted fn (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

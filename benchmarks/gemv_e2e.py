@@ -1,0 +1,69 @@
+"""§GEMV-e2e — paper Fig. 12: compute vs transfer, GEMV-MV vs GEMV-V.
+
+The paper's two scenarios on one device (CPU stand-in; trends only):
+
+  GEMV-MV   the matrix is (re)staged every call: host→device transfer +
+            layout transform (quantize/pack) + compute + result return
+  GEMV-V    the matrix is resident (converted once); per call only the
+            vector moves
+
+Derived: transfer:compute ratio per size — the paper's ~10:1 MV finding
+and the V-scenario crossover where compute dominates once the per-call
+payload shrinks to the vector.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import qlinear
+
+SIZES = [(2048, 2048), (4096, 4096), (8192, 8192)]
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for k, n in SIZES:
+        w_host = rng.normal(size=(k, n)).astype(np.float32) / np.sqrt(k)
+        x = jnp.array(rng.normal(size=(1, k)).astype(np.float32))
+        mb = w_host.nbytes / 1e6
+
+        # GEMV-V: one-time residency conversion, then resident int8 GEMV
+        state = qlinear.from_float(jnp.asarray(w_host), "w8a8")
+        state = jax.tree_util.tree_map(jax.block_until_ready, state)
+        apply_v = jax.jit(lambda s, v: qlinear.apply(s, v))
+        jax.block_until_ready(apply_v(state, x))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(apply_v(state, x))
+        t_v = (time.perf_counter() - t0) / 5
+
+        # GEMV-MV: stage the matrix each call (device_put + convert + gemv)
+        def mv_call():
+            w_dev = jax.device_put(w_host)
+            s = qlinear.from_float(w_dev, "w8a8")
+            return apply_v(s, x)
+
+        jax.block_until_ready(mv_call())
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(mv_call())
+        t_mv = (time.perf_counter() - t0) / 3
+
+        ratio = (t_mv - t_v) / max(t_v, 1e-9)
+        rows.append(row(f"gemv_e2e/V_{mb:.0f}MB", t_v, f"scenario=resident"))
+        rows.append(
+            row(f"gemv_e2e/MV_{mb:.0f}MB", t_mv,
+                f"transfer_to_compute={ratio:.1f};slowdown={t_mv/t_v:.1f}")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,69 @@
+"""§GEMV-scale — paper Fig. 13: GOPS at full-system scale vs a CPU server.
+
+The paper: 2551 DPUs hit 650 GOPS (INT8) / 1000 GOPS (INT4 BSDP) in the
+weights-resident scenario vs ~200 GOPS for a dual-socket Kunpeng 920.
+
+Here:
+  measured   this host's f32/int8 GEMV GOPS (the "CPU server" column)
+  derived    a 256-chip v5e pod in the same weight-resident regime, from
+             the memory-bound GEMV model: GOPS = 2·W_bytes/t, with
+             t = W_bytes/(chips·HBM_bw) — decode GEMV streams every
+             resident weight byte once per token, so throughput is
+             bandwidth × (2 MACs per weight-byte ÷ bytes-per-weight).
+
+The derived column is what the decode-cell dry-runs corroborate
+(EXPERIMENTS.md §Roofline: minicpm3/decode memory term == weight bytes /
+HBM bw to within the cache-read correction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.launch.hlo_stats import HW
+
+CHIPS = 256
+SIZE = 4096
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    w = jnp.array(rng.normal(size=(SIZE, SIZE)).astype(np.float32))
+    x = jnp.array(rng.normal(size=(1, SIZE)).astype(np.float32))
+    w8 = jnp.array(rng.integers(-128, 128, (SIZE, SIZE)).astype(np.int8))
+    x8 = jnp.array(rng.integers(-128, 128, (1, SIZE)).astype(np.int8))
+    ops_count = 2 * SIZE * SIZE
+
+    t = time_fn(jax.jit(lambda a, b: a @ b), x, w)
+    rows.append(row("gemv_scale/host_f32", t, f"GOPS={ops_count/t/1e9:.1f};role=cpu_server"))
+
+    t = time_fn(
+        jax.jit(lambda a, b: jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)),
+        x8, w8,
+    )
+    rows.append(row("gemv_scale/host_int8", t, f"GOPS={ops_count/t/1e9:.1f};role=cpu_server"))
+
+    # derived pod-scale weight-resident GEMV (memory-bound model)
+    bw = CHIPS * HW["hbm_bw"]
+    for name, bytes_per_weight in (
+        ("bf16", 2.0), ("int8_NI", 1.0), ("int4_bsdp", 0.5)
+    ):
+        gops = 2.0 * bw / bytes_per_weight / 1e9
+        rows.append(
+            row(f"gemv_scale/pod256_{name}", 0.0,
+                f"GOPS_derived={gops:.0f};model=HBM-bound;chips={CHIPS}")
+        )
+    # paper's own numbers for reference in EXPERIMENTS.md comparisons
+    rows.append(row("gemv_scale/paper_upmem_int8", 0.0, "GOPS=650;source=paper"))
+    rows.append(row("gemv_scale/paper_upmem_int4", 0.0, "GOPS=1000;source=paper"))
+    rows.append(row("gemv_scale/paper_kunpeng", 0.0, "GOPS=200;source=paper"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

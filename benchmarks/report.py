@@ -1,0 +1,152 @@
+"""Generate EXPERIMENTS.md §Dry-run/§Roofline/§Perf tables from results/.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+
+def load_dir(d):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    pod = [r for r in recs if not r.get("multi_pod")]
+    mp = [r for r in recs if r.get("multi_pod")]
+    ok_pod = sum(r.get("status") == "ok" for r in pod)
+    ok_mp = sum(r.get("status") == "ok" for r in mp)
+    lines = [
+        f"**Single-pod (16×16 = 256 chips): {ok_pod}/{len(pod)} cells compiled.**  ",
+        f"**Multi-pod (2×16×16 = 512 chips): {ok_mp}/{len(mp)} cells compiled** "
+        "(compile-only pass: proves the `pod` axis shards; roofline probes are "
+        "single-pod per the assignment).",
+        "",
+        "| arch | shape | mesh | status | args GB/dev | temp GB/dev | plan |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r.get('arch')} | {r.get('shape')} | {mesh} | FAIL | | | "
+                f"{str(r.get('error'))[:60]} |"
+            )
+            continue
+        mem = r.get("memory", {})
+        arg = (mem.get("argument_size_in_bytes") or 0) / 1e9
+        tmp = (mem.get("temp_size_in_bytes") or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | {arg:.2f} | "
+            f"{tmp:.2f} | {r.get('plan_notes','')} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    pod = [r for r in recs if not r.get("multi_pod") and r.get("roofline")]
+    lines = [
+        "| arch | shape | compute s | memory s (upper) | collective s | dominant "
+        "| MODEL_FLOPS/dev | useful ratio | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in pod:
+        ro = r["roofline"]
+        lever = _lever(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {ro['t_compute']:.3f} "
+            f"| {ro['t_memory']:.3f} ({ro.get('t_memory_upper', 0):.1f}) "
+            f"| {ro['t_collective']:.3f} "
+            f"| **{ro['dominant']}** "
+            f"| {ro['model_flops_per_device']:.2e} "
+            f"| {ro['useful_flops_ratio']:.2f} "
+            f"| {ro['roofline_fraction']*100:.1f}% "
+            f"| {lever} |"
+        )
+    return "\n".join(lines)
+
+
+def _lever(r) -> str:
+    ro = r["roofline"]
+    dom = ro["dominant"]
+    kind = r.get("kind")
+    if dom == "collective":
+        return "shift mesh factorization toward DP (see §Perf P2/P3)"
+    if dom == "memory" and kind == "decode":
+        return "quantized weight residency (see §Perf P1)"
+    if dom == "memory":
+        return "larger microbatch / fused attention lowers act traffic"
+    return "near compute roof; kernel/block tuning"
+
+
+def perf_table(recs) -> str:
+    by_cell: dict = {}
+    for r in recs:
+        name = None
+        # variant files are named P?_<variant>.json; recover the group
+        # from the stored fields
+        key = (r.get("arch"), r.get("shape"))
+        by_cell.setdefault(key, []).append(r)
+    lines = []
+    for (arch, shape), rs in by_cell.items():
+        ok = [r for r in rs if r.get("status") == "ok"]
+        if not ok:
+            continue
+        base = ok[0]["roofline"]["step_lower_bound"]
+        lines.append(f"\n**{arch} × {shape}**\n")
+        lines.append("| variant | hypothesis | compute s | memory s | "
+                     "collective s | bound s | Δ vs base | dominant |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for r in rs:
+            if r.get("status") != "ok":
+                lines.append(f"| {r.get('variant')} | {r.get('hypothesis','')} "
+                             f"| | | | FAIL | | |")
+                continue
+            ro = r["roofline"]
+            lines.append(
+                f"| {r.get('variant')} | {r.get('hypothesis','')[:70]} "
+                f"| {ro['t_compute']:.3f} | {ro['t_memory']:.3f} "
+                f"| {ro['t_collective']:.3f} | {ro['step_lower_bound']:.3f} "
+                f"| {base/max(ro['step_lower_bound'],1e-12):.2f}× "
+                f"| {ro['dominant']} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    dry = load_dir("results/dryrun")
+    perf = load_dir("results/perf")
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    # replace between markers: marker .. next section header
+    def replace_block(text, marker, payload):
+        tag = f"<!-- {marker} -->"
+        idx = text.find(tag)
+        if idx < 0:
+            return text + f"\n{tag}\n{payload}\n"
+        rest = text[idx + len(tag):]
+        nxt = rest.find("\n## ")
+        tail = rest[nxt:] if nxt >= 0 else ""
+        return text[:idx] + tag + "\n\n" + payload + "\n" + tail
+
+    text = replace_block(text, "DRYRUN_TABLE", dryrun_table(dry))
+    text = replace_block(text, "ROOFLINE_TABLE", roofline_table(dry))
+    if perf:
+        text = replace_block(text, "PERF_LOG", perf_table(perf))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated:",
+          len(dry), "dry-run records,", len(perf), "perf records")
+
+
+if __name__ == "__main__":
+    main()

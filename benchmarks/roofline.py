@@ -1,0 +1,84 @@
+"""§Roofline reporter: aggregate dry-run JSON records into the table.
+
+Reads results/dryrun/*.json (written by ``python -m repro.launch.dryrun``)
+and prints, per (arch × shape × mesh):
+
+    compute / memory / collective terms (seconds), the dominant term,
+    MODEL_FLOPS, useful-flops ratio, and the roofline fraction.
+
+Assumption notes carried with the table:
+  * compute term  — probe-corrected HLO FLOPs / 197 TFLOP/s bf16
+  * memory term   — analytic min-traffic model / 819 GB/s (the HLO
+    'bytes accessed' no-fusion upper bound is shown in parentheses)
+  * collective    — probe-corrected wire bytes / 50 GB/s (one-link
+    bottleneck; a 2-D torus all-reduce can use 2 links ⇒ up to 2× better)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") != "ok":
+        return (f"{r['arch']:<26} {r['shape']:<12} "
+                f"{'multi' if r.get('multi_pod') else 'pod':<6} "
+                f"{r.get('qmode','-'):<10} FAILED: {r.get('error','?')[:60]}")
+    ro = r.get("roofline")
+    mesh = "multi" if r.get("multi_pod") else "pod"
+    if not ro:
+        return (f"{r['arch']:<26} {r['shape']:<12} {mesh:<6} "
+                f"{r['qmode']:<10} compiled-ok (no probe analysis)")
+    return (
+        f"{r['arch']:<26} {r['shape']:<12} {mesh:<6} {r['qmode']:<10} "
+        f"c={ro['t_compute']:8.3f}s m={ro['t_memory']:8.3f}s "
+        f"x={ro['t_collective']:8.3f}s dom={ro['dominant']:<10} "
+        f"useful={ro['useful_flops_ratio']:5.2f} "
+        f"roofline={ro['roofline_fraction']*100:5.1f}%"
+    )
+
+
+def run(out_dir: str = "results/dryrun") -> list[str]:
+    recs = load(out_dir)
+    rows = []
+    for r in recs:
+        ro = r.get("roofline") or {}
+        frac = ro.get("roofline_fraction")
+        rows.append(
+            f"roofline/{r.get('arch','?')}_{r.get('shape','?')}_"
+            f"{'multi' if r.get('multi_pod') else 'pod'}_{r.get('qmode','bf16')},"
+            f"{(ro.get('step_lower_bound') or 0)*1e6:.1f},"
+            f"dominant={ro.get('dominant','-')};"
+            f"fraction={frac if frac is not None else '-'};"
+            f"status={r.get('status')}"
+        )
+    return rows
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    if not recs:
+        print(f"no dry-run records under {out_dir}; run repro.launch.dryrun first")
+        return
+    print(f"{'arch':<26} {'shape':<12} {'mesh':<6} {'qmode':<10} roofline terms")
+    print("-" * 120)
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    print(f"\n{len(ok)}/{len(recs)} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+    arith       Fig. 3/6/7/8  native-instruction arithmetic ladder
+    bsdp        Fig. 9        bit-serial INT4 dot product vs baselines
+    transfer    Fig. 11       topology-aware vs naive host→device feeding
+    gemv_e2e    Fig. 12       GEMV-MV vs GEMV-V compute:transfer split
+    gemv_scale  Fig. 13       full-system GOPS vs CPU server (derived)
+    roofline    (ours)        §Roofline summary from dry-run records
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+One:     ``PYTHONPATH=src python -m benchmarks.run --only bsdp``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import arith, bsdp, gemv_e2e, gemv_scale, roofline, transfer
+
+    suites = {
+        "arith": arith.run,
+        "bsdp": bsdp.run,
+        "transfer": transfer.run,
+        "gemv_e2e": gemv_e2e.run,
+        "gemv_scale": gemv_scale.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

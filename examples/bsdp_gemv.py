@@ -1,0 +1,58 @@
+"""The paper's core experiment: amortized bit-serial GEMV (§IV + §VI).
+
+    PYTHONPATH=src python examples/bsdp_gemv.py
+
+Encodes a quantized weight matrix into the BSDP bit-plane layout ONCE,
+then runs repeated GEMVs against fresh activation vectors — the paper's
+"matrix preloaded into PIM" scenario — for every compute form, asserting
+bit-exact agreement and reporting the encode-amortization math.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane, bsdp
+from repro.kernels import ops, ref
+
+K, N, CALLS = 4096, 2048, 10
+
+
+def main():
+    rng = np.random.default_rng(0)
+    w4 = jnp.array(rng.integers(-8, 8, (K, N)).astype(np.int8))
+
+    t0 = time.perf_counter()
+    planes = jax.block_until_ready(bitplane.encode_weights(w4))
+    t_encode = time.perf_counter() - t0
+    print(f"one-time bit-plane encode: {t_encode*1e3:.1f} ms "
+          f"({planes.size * 4 / 1e6:.1f} MB resident vs "
+          f"{K * N * 2 / 1e6:.1f} MB bf16 — 4x smaller)")
+
+    forms = {
+        "popcount (faithful cao/lsl_add port)":
+            jax.jit(lambda a: bsdp.bsdp_gemv(planes, a, form="popcount")),
+        "mxu plane-matmul (TPU-native)":
+            jax.jit(lambda a: bsdp.bsdp_gemv(planes, a, form="matmul")),
+        "pallas kernel (interpret)":
+            lambda a: ops.bsdp_gemv(a, planes),
+    }
+    for name, fn in forms.items():
+        total = 0.0
+        for i in range(CALLS):
+            a = jnp.array(rng.integers(-8, 8, (4, K)).astype(np.int8))
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(a))
+            total += time.perf_counter() - t0
+            assert (np.array(out) == np.array(ref.bsdp_ref(a, w4))).all(), name
+        per = total / CALLS
+        print(f"{name:<40} {per*1e3:8.2f} ms/GEMV  "
+              f"(encode amortized over {CALLS} calls: "
+              f"+{t_encode/CALLS/per*100:.1f}% each)")
+    print("bsdp_gemv OK — all forms bit-exact vs the int32 oracle")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fault-tolerant training demo: checkpoints, injected failure, restart.
+
+    PYTHONPATH=src python examples/train_resilient.py
+
+Trains a reduced jamba (hybrid mamba+attention+MoE — the most demanding
+assigned topology) with async checkpointing every 10 steps, kills it at
+step 23 via the failure injector, and shows the trainer restoring from
+step 20 and completing — the bounded-work-loss loop every 1000-node job
+needs.  Also prints the watchdog's straggler telemetry.
+"""
+
+import tempfile
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.distributed.resilience import FailureSim
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(
+            cfg, data,
+            TrainerConfig(steps=40, ckpt_every=10, log_every=5, ckpt_dir=d,
+                          peak_lr=1e-3, warmup=5, moment_dtype="bf16"),
+            failure_sim=FailureSim(fail_at=(23,)),
+        )
+        out = tr.run()
+        seen = [h["step"] for h in out["history"]]
+        print("logged steps:", seen)
+        print(f"final loss  : {out['history'][-1]['loss']:.3f}")
+        print(f"stragglers  : {out['stragglers']}")
+        assert 39 in seen, "run did not complete after restart"
+        # steps 20..22 appear twice: once pre-failure, once after restore
+        assert seen.count(20) >= 1
+        print("train_resilient OK — failure at step 23 recovered from step-20 ckpt")
+
+
+if __name__ == "__main__":
+    main()

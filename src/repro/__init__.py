@@ -1,0 +1,10 @@
+"""repro: a production-grade JAX framework reproducing and extending
+"UPMEM Unleashed: Software Secrets for Speed" on TPU.
+
+Quantized, weight-resident GEMV serving + distributed training with
+bit-serial int4 (BSDP), decomposed wide-int matmul (DIM), W8A8/W4A8 Pallas
+kernels, and topology-aware transfer planning, scaled over a
+(pod, data, model) mesh.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,34 @@
+"""Architecture registry: get_config(name) / get_smoke_config(name)."""
+
+from importlib import import_module
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeCell, applicable_shapes  # noqa: F401
+
+_MODULES = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "starcoder2-3b": "starcoder2_3b",
+    "minicpm3-4b": "minicpm3_4b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def _load(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _load(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _load(name).SMOKE

@@ -1,0 +1,27 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096, attention-free Mamba-1.
+
+ssm_state=16, d_inner=8192, vocab 65024.  [arXiv:2410.05355]
+Decode state is O(1) in sequence length -> long_500k runs natively.
+DESIGN.md SArch-applicability: the BSDP/GEMV technique applies to the
+in/out/x projections; the selective scan itself is not GEMV-shaped.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_head=0,
+    d_ff=0,
+    vocab_size=65024,
+    d_state=16,
+    d_conv=4,
+    expand=2,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, d_state=4, vocab_size=512)

@@ -1,0 +1,27 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (kv=40) d_ff=27392 vocab=152064.
+
+QKV bias (the Qwen1.5 signature).  [hf:Qwen/Qwen1.5-0.5B family]
+40 heads do not divide the 16-way model axis; heads are padded to 48 in the
+sharded layout (zero-masked, exact — see sharding/partitioning.py).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_head=128,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,33 @@
+"""seamless-m4t-medium [audio]: enc-dec, 12+12L d_model=1024 16H d_ff=4096.
+
+vocab 256206 (pads to 256256 for TP=16).  [arXiv:2308.11596]
+The speech frontend is a STUB per the assignment: input_specs() supplies
+precomputed frame embeddings [batch, 1536, d_model]; the text decoder
+cross-attends to the encoder output.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab_size=256206,
+    is_enc_dec=True,
+    n_enc_layers=12,
+    cross_attn_period=1,  # every decoder layer cross-attends
+    cross_attn_offset=0,
+    encoder_tokens=1536,
+    norm="layernorm",
+    act="gelu",
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_head=16, d_ff=128, vocab_size=512, encoder_tokens=24,
+)

@@ -1,0 +1,30 @@
+"""The paper's own workload: quantized weight-resident GEMV service (SVI).
+
+A single giant GEMV layer bank mirroring the paper's 256MB-128GB matrices,
+row-sharded across the mesh exactly as the matrix is tiled across 2551
+DPUs.  Used by benchmarks/gemv_scale.py and examples/serve_gemv.py.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GemvServiceConfig:
+    name: str = "upmem-gemv"
+    d_in: int = 16384          # K (vector length)
+    d_out: int = 16384         # N (rows) -- per size sweep this scales
+    mode: str = "w8a8"         # bf16 | w8a16 | w8a8 | w4a8 | w4a4_bsdp
+    scenario: str = "gemv_v"   # gemv_v (weights resident) | gemv_mv (streamed)
+    batch: int = 1
+
+
+CONFIG = GemvServiceConfig()
+
+SIZE_SWEEP = [  # (d_out, d_in) ~ paper's 256MB..128GB INT8 matrices
+    (16384, 16384),     # 256 MB
+    (32768, 32768),     # 1 GB
+    (65536, 65536),     # 4 GB
+    (131072, 131072),   # 16 GB
+    (262144, 262144),   # 64 GB
+    (371_712, 371_712), # ~128 GB
+]

@@ -1,0 +1,16 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- :mod:`repro.core.quant`     -- symmetric int8/int4 quantization
+- :mod:`repro.core.bitplane`  -- BSDP bit-plane layout (paper SIV)
+- :mod:`repro.core.bsdp`      -- bit-serial dot-product math
+- :mod:`repro.core.dim`       -- decomposed wide-int matmul (paper SIII-C)
+- :mod:`repro.core.qlinear`   -- quantized linear layer w/ kernel dispatch
+- :mod:`repro.core.transfer`  -- topology-aware transfer planning (paper SV)
+"""
+
+from repro.core.quant import (  # noqa: F401
+    QuantTensor,
+    quantize,
+    quantize_acts,
+    quantize_weights,
+)

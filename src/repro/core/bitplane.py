@@ -1,0 +1,110 @@
+"""Bit-plane (BSDP) layout encode/decode — the paper's §IV data layout.
+
+The paper transposes INT4/UINT4 vectors so that every block of 32 elements
+is stored as four consecutive UINT32 words: word ``j`` holds the ``2^j``
+bit-plane of the 32 elements.  The dot product then becomes 16 AND+popcount
+passes (Algorithm 2).  This module implements that exact layout in JAX:
+
+* ``encode(x)``   : int4 values (int8 payload in [-8,7] or uint in [0,15])
+                    → ``[..., 4, K/32]`` uint32 planes.
+* ``decode(p)``   : inverse, for tests.
+* ``encode_weights`` : one-time matrix encode ``[K, N] → [N, 4, K/32]``
+                    (row-major per output channel, matching the paper's
+                    "each DPU owns a block of rows" weight-stationary GEMV).
+
+On UPMEM the transposition is done host-side with AVX512 and amortized over
+many GEMV calls; here it is a jit'd gather-free bit-twiddle that runs once at
+model load (weights) or fused into the request path (activations).
+
+Two's-complement convention for signed int4: ``v = -8·b3 + 4·b2 + 2·b1 + b0``.
+The sign-plane algebra this induces in the dot product lives in
+:mod:`repro.core.bsdp`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PLANE_BITS = 4  # int4 / uint4
+WORD = 32  # elements per packed uint32 word
+
+_POW2 = None  # lazily-built (1 << arange(32)) uint32 constant
+
+
+def _pow2() -> jax.Array:
+    global _POW2
+    if _POW2 is None:
+        _POW2 = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)).astype(
+            jnp.uint32
+        )
+    return _POW2
+
+
+def encode(x: jax.Array) -> jax.Array:
+    """Encode int4 values into bit-planes.
+
+    Args:
+      x: ``[..., K]`` integer array with values in [-8, 7] (signed) or
+         [0, 15] (unsigned); K must be a multiple of 32.
+
+    Returns:
+      ``[..., 4, K//32]`` uint32 — axis -2 indexes the bit plane ``j``,
+      axis -1 the 32-element word.
+    """
+    k = x.shape[-1]
+    if k % WORD:
+        raise ValueError(f"K={k} must be a multiple of {WORD}; pad first")
+    u = (x.astype(jnp.int32) & 0xF).astype(jnp.uint32)  # two's-complement nibble
+    u = u.reshape(*x.shape[:-1], k // WORD, WORD)
+    planes = []
+    for j in range(PLANE_BITS):
+        bits = (u >> jnp.uint32(j)) & jnp.uint32(1)
+        word = jnp.sum(bits * _pow2(), axis=-1, dtype=jnp.uint32)
+        planes.append(word)
+    return jnp.stack(planes, axis=-2)  # [..., 4, K//32]
+
+
+def decode(planes: jax.Array, *, signed: bool = True) -> jax.Array:
+    """Inverse of :func:`encode` → int8 values ([-8,7] signed / [0,15] unsigned)."""
+    *lead, nplanes, kw = planes.shape
+    if nplanes != PLANE_BITS:
+        raise ValueError(f"expected {PLANE_BITS} planes, got {nplanes}")
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    vals = jnp.zeros((*lead, kw, WORD), dtype=jnp.int32)
+    for j in range(PLANE_BITS):
+        word = planes[..., j, :]
+        bits = ((word[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+        weight = -8 if (signed and j == 3) else (1 << j)
+        vals = vals + bits * weight
+    return vals.reshape(*lead, kw * WORD).astype(jnp.int8)
+
+
+def encode_weights(q: jax.Array) -> jax.Array:
+    """One-time BSDP encode of a quantized weight matrix.
+
+    Args:
+      q: ``[K, N]`` int4-valued (int8 payload) weight matrix.
+
+    Returns:
+      ``[N, 4, K//32]`` uint32 — output-channel-major so a TP shard of the N
+      axis owns contiguous planes (the "block of rows per DPU" layout).
+    """
+    return encode(q.T)  # [N, K] -> [N, 4, K//32]
+
+
+def encode_acts(x: jax.Array) -> jax.Array:
+    """Per-request activation encode ``[..., K] → [..., 4, K//32]``."""
+    return encode(x)
+
+
+def pad_to_word(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Zero-pad ``axis`` up to a multiple of 32 (zeros contribute 0 planes →
+    exact for both signed and unsigned dot products)."""
+    n = x.shape[axis]
+    pad = (-n) % WORD
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis if axis >= 0 else x.ndim + axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -1,0 +1,92 @@
+"""Decomposed Integer Multiplication (DIM) — the paper's §III-C, for matmuls.
+
+UPMEM lacks a wide hardware multiplier, so the paper builds INT32 multiply
+from four native UINT8 multiplies plus shifts (26 cycles vs 32 `mul_step`s).
+The TPU analogue: the MXU natively contracts int8×int8→int32 at 394 TOP/s,
+but has no int16/int32 multiplier mode — so a *wide-precision* matmul is
+built from **byte-plane int8 MXU passes**:
+
+    W (int16)  =  256·W_hi (int8, signed)  +  W_lo (uint8)
+    x @ W      =  256·(x @ W_hi)           +  (x @ W_lo)
+
+and for int32 weights, four planes with shifts 0/8/16/24 (top plane signed,
+lower planes unsigned).  Exact over integers as long as the int32
+accumulator does not overflow: |x|≤127, plane magnitude ≤255 ⇒ safe for
+K ≤ 2^31 / (127·255) ≈ 66K contraction length per pass; the wrapper splits K
+beyond that.
+
+This gives the framework a W16A8 / W32A8 path that never touches float and
+runs entirely on the int8 MXU — the paper's "use the narrow native unit to
+build the wide op" insight, hardware-adapted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Max contraction length per int8·uint8 accumulation pass (documented bound).
+MAX_K_PER_PASS = (2**31 - 1) // (127 * 255)
+
+
+def decompose_int16(w: jax.Array):
+    """Split int16 → (hi int8 signed, lo uint8): ``w == 256*hi + lo`` exactly."""
+    w32 = w.astype(jnp.int32)
+    hi = (w32 >> 8).astype(jnp.int8)  # arithmetic shift keeps the sign
+    lo = (w32 & 0xFF).astype(jnp.uint8)
+    return hi, lo
+
+
+def compose_int16(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    return (hi.astype(jnp.int32) * 256 + lo.astype(jnp.int32)).astype(jnp.int16)
+
+
+def decompose_int32(w: jax.Array):
+    """Split int32 → 4 byte planes (b3 signed int8, b2..b0 uint8)."""
+    w = w.astype(jnp.int32)
+    b3 = (w >> 24).astype(jnp.int8)
+    b2 = ((w >> 16) & 0xFF).astype(jnp.uint8)
+    b1 = ((w >> 8) & 0xFF).astype(jnp.uint8)
+    b0 = (w & 0xFF).astype(jnp.uint8)
+    return b3, b2, b1, b0
+
+
+def _dot_i32(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8/uint8 contraction with int32 accumulation (MXU-native form)."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def matmul_w16a8(x_i8: jax.Array, w_i16: jax.Array) -> jax.Array:
+    """Exact ``x_i8 [..., K] @ w_i16 [K, N]`` → int32 via two int8 passes."""
+    _check_k(x_i8.shape[-1])
+    hi, lo = decompose_int16(w_i16)
+    return (_dot_i32(x_i8, hi) << 8) + _dot_i32(x_i8, lo)
+
+
+def matmul_w32a8(x_i8: jax.Array, w_i32: jax.Array) -> jax.Array:
+    """Exact ``x_i8 [..., K] @ w_i32 [K, N]`` → int64-free int32 result.
+
+    Note: the mathematical product can exceed int32; like the paper (which
+    returns a 32-bit register), the result is int32 two's-complement wrap —
+    exact modulo 2^32, and exactly equal to the int32-cast true product.
+    """
+    _check_k(x_i8.shape[-1])
+    b3, b2, b1, b0 = decompose_int32(w_i32)
+    acc = _dot_i32(x_i8, b0)
+    acc = acc + (_dot_i32(x_i8, b1) << 8)
+    acc = acc + (_dot_i32(x_i8, b2) << 16)
+    acc = acc + (_dot_i32(x_i8, b3) << 24)
+    return acc
+
+
+def _check_k(k: int):
+    if k > MAX_K_PER_PASS:
+        raise ValueError(
+            f"contraction K={k} exceeds the int32-safe bound {MAX_K_PER_PASS}; "
+            "split the contraction (kernels/ops.py does this automatically)"
+        )

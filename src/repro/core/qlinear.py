@@ -1,0 +1,130 @@
+"""QuantLinear: the paper's weight-resident quantized GEMV as a layer.
+
+A :class:`QuantLinear` owns a weight matrix in one of five residency modes
+(the paper's GEMV-V scenario — weights preloaded in device memory — is the
+point of all of them):
+
+=============  =============================================================
+mode           weight storage / compute path
+=============  =============================================================
+``bf16``       plain bf16 matmul — the unquantized reference
+``w8a16``      int8 weights + per-channel scale; bf16 acts; fused-dequant
+               Pallas kernel (``dequant_gemv``)
+``w8a8``       int8 weights; activations dynamically quantized per-token;
+               int8×int8 MXU kernel (``gemv_int8``) — the NI path of §III-B
+``w4a8``       packed int4 weights (2/byte, half the HBM bytes); int8 acts;
+               in-kernel unpack (``gemv_int4``)
+``w4a4_bsdp``  bit-plane int4 weights + int4 acts; popcount kernel or MXU
+               plane-matmul (§IV) — activation encode fused per request
+=============  =============================================================
+
+``QuantLinear.from_float`` performs the one-time layout transform (quantize,
+pack, bit-plane encode) that the paper amortizes over many GEMV calls; it
+runs at model-load/checkpoint-convert time, never on the request path.
+
+Because the per-mode payloads shard identically (N on the ``model`` axis,
+K replicated or FSDP-sharded), a served model can flip modes per-layer —
+e.g. BSDP for the giant FFN GEMVs, w8a16 for the small latent projections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane, quant
+from repro.kernels import ops
+
+MODES = ("bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantLinearState:
+    """Pytree payload for one quantized linear layer."""
+
+    data: jax.Array  # mode-dependent payload (see module docstring)
+    scale: jax.Array  # [1, N] per-output-channel (f32)
+    mode: str = dataclasses.field(metadata=dict(static=True), default="w8a8")
+    k: int = dataclasses.field(metadata=dict(static=True), default=0)  # logical K
+    n: int = dataclasses.field(metadata=dict(static=True), default=0)  # logical N
+
+
+def from_float(w: jax.Array, mode: str = "w8a8") -> QuantLinearState:
+    """One-time convert of a float ``[K, N]`` weight to residency ``mode``."""
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    k, n = w.shape
+    if mode == "bf16":
+        return QuantLinearState(
+            data=w.astype(jnp.bfloat16), scale=jnp.ones((1, n), jnp.float32),
+            mode=mode, k=k, n=n,
+        )
+    if mode in ("w8a16", "w8a8"):
+        qt = quant.quantize_weights(w, bits=8)
+        return QuantLinearState(
+            data=qt.data, scale=qt.scale.reshape(1, n), mode=mode, k=k, n=n
+        )
+    qt = quant.quantize_weights(w, bits=4)
+    if mode == "w4a8":
+        kp = k + (k % 2)
+        q = jnp.pad(qt.data, ((0, kp - k), (0, 0)))
+        return QuantLinearState(
+            data=quant.pack_int4(q, axis=0), scale=qt.scale.reshape(1, n),
+            mode=mode, k=k, n=n,
+        )
+    # w4a4_bsdp: [N, 4, ceil(K/32)] uint32 planes — the paper's layout.
+    q = bitplane.pad_to_word(qt.data, axis=0)
+    planes = bitplane.encode_weights(q)
+    return QuantLinearState(
+        data=planes, scale=qt.scale.reshape(1, n), mode=mode, k=k, n=n
+    )
+
+
+def apply(
+    state: QuantLinearState,
+    x: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``x [..., K] → [..., N]`` through the mode's kernel. Returns f32."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    mode = state.mode
+
+    if mode == "bf16":
+        out = jnp.dot(x2.astype(jnp.bfloat16), state.data).astype(jnp.float32)
+    elif mode == "w8a16":
+        out = ops.weight_only_matmul(x2.astype(jnp.float32), _as_qt(state), interpret=interpret)
+    elif mode == "w8a8":
+        xq = quant.quantize_acts(x2.astype(jnp.float32), bits=8)
+        out = ops.quant_matmul(xq, _as_qt(state), interpret=interpret)
+    elif mode == "w4a8":
+        xq = quant.quantize_acts(x2.astype(jnp.float32), bits=8)
+        out = ops.quant_matmul_int4(xq, state.data, state.scale, interpret=interpret)
+    elif mode == "w4a4_bsdp":
+        xq = quant.quantize_acts(x2.astype(jnp.float32), bits=4)
+        acc = ops.bsdp_gemv(xq.data, state.data, signed=True, interpret=interpret)
+        out = acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
+    else:
+        raise ValueError(mode)
+    return out.reshape(*lead, state.n)
+
+
+def _as_qt(state: QuantLinearState) -> quant.QuantTensor:
+    return quant.QuantTensor(data=state.data, scale=state.scale, bits=8, axis=0)
+
+
+def resident_bytes(state: QuantLinearState) -> int:
+    """HBM bytes of the resident weight — the roofline 'memory term' input."""
+    per = {
+        "bf16": 2 * state.k * state.n,
+        "w8a16": state.k * state.n,
+        "w8a8": state.k * state.n,
+        "w4a8": -(-state.k // 2) * state.n,
+        "w4a4_bsdp": 4 * 4 * (-(-state.k // 32)) * state.n,  # == k*n/2 bytes
+    }[state.mode]
+    return per + 4 * state.n  # + scales

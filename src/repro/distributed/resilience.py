@@ -1,0 +1,93 @@
+"""Fault tolerance & straggler telemetry for long-running training jobs.
+
+At 1000+ nodes the mean time between node failures drops below job length;
+the framework must (a) lose bounded work on failure, (b) notice when it is
+about to fail or is being slowed down, and (c) restart onto whatever
+healthy topology remains.  Three cooperating pieces:
+
+* :class:`StepWatchdog` — per-step wall-time telemetry with EWMA baseline;
+  flags stragglers (step > k× EWMA) and hangs (no heartbeat within
+  timeout).  On SPMD TPU a straggling host slows every step globally, so
+  detection is possible from any host's timing alone — the mitigation is
+  topology-level (checkpoint, evict, restart), which is what the trainer
+  does on escalation.
+* :class:`FailureSim` — deterministic fault injector for tests/examples
+  (raises ``SimulatedFailure`` at configured steps; the trainer's
+  restart-from-checkpoint path is exercised by tests/test_resilience.py).
+* :func:`plan_elastic_mesh` — given surviving device count, proposes the
+  largest (data, model) mesh compatible with the model's sharding
+  constraints; checkpoint restore reshards onto it (ckpt.restore with new
+  pspecs) — elastic shrink/grow without conversion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class WatchdogReport:
+    step: int
+    seconds: float
+    ewma: float
+    straggler: bool
+
+
+class StepWatchdog:
+    def __init__(self, *, ratio: float = 2.0, alpha: float = 0.1,
+                 hang_timeout: float = 600.0):
+        self.ratio, self.alpha, self.hang_timeout = ratio, alpha, hang_timeout
+        self.ewma: Optional[float] = None
+        self.last_beat = time.monotonic()
+        self.reports: list[WatchdogReport] = []
+        self.straggler_steps: list[int] = []
+
+    def observe(self, step: int, seconds: float) -> WatchdogReport:
+        self.last_beat = time.monotonic()
+        if self.ewma is None:
+            self.ewma = seconds
+        straggler = seconds > self.ratio * self.ewma and step > 2
+        # stragglers do not update the baseline (they would mask repeats)
+        if not straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * seconds
+        rep = WatchdogReport(step, seconds, self.ewma, straggler)
+        self.reports.append(rep)
+        if straggler:
+            self.straggler_steps.append(step)
+        return rep
+
+    def hung(self) -> bool:
+        return (time.monotonic() - self.last_beat) > self.hang_timeout
+
+
+class FailureSim:
+    """Raise SimulatedFailure at the configured steps (once each)."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def plan_elastic_mesh(
+    n_devices: int, *, model_parallel: int, min_data: int = 1
+) -> Optional[tuple[int, int]]:
+    """Largest (data, model) grid for the surviving device count.
+
+    model_parallel is fixed by weight shardability (head/ff divisibility);
+    data shrinks to the largest value with data*model <= n_devices.
+    Returns None if even min_data doesn't fit (job cannot continue).
+    """
+    if n_devices < model_parallel * min_data:
+        return None
+    data = n_devices // model_parallel
+    return (data, model_parallel)

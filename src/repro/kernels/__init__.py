@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the performance-critical quantized matmul paths.
+
+Each kernel module contains the ``pl.pallas_call`` + BlockSpec tiling; the
+jit'd public wrappers live in :mod:`repro.kernels.ops`; bit-exact pure-jnp
+oracles live in :mod:`repro.kernels.ref`.  On non-TPU backends the wrappers
+dispatch with ``interpret=True``.
+"""

@@ -1,0 +1,74 @@
+"""W8A16 weight-only-quantized matmul Pallas kernel (fused dequantize).
+
+Serving path for layers where activations stay bf16 (attention projections
+fed by normed residuals) but weights are int8-resident.  The naive route —
+materialize ``w.astype(bf16) * scale`` in HBM, then matmul — doubles weight
+bytes and is precisely the "let the toolchain emulate it" anti-pattern the
+paper warns about.  Here the int8 weight tile is staged to VMEM (half the
+HBM traffic of bf16 weights), widened and scaled **in registers**, and fed
+straight to the MXU — the NI×8 "load narrow, widen next to the compute
+unit" pattern of §III-B, Figure 5.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dequant_matmul_kernel(x_ref, w_ref, ws_ref, o_ref, acc_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Widen int8 → f32 next to the MXU; per-channel scale is folded in the
+    # epilogue (scales are per-N-channel, invariant along K).
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32),
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dequant_matmul(
+    x: jax.Array,
+    w_i8: jax.Array,
+    w_scale: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``[M,K] bf16/f32 @ int8 [K,N] (per-channel scale [1,N]) → f32 [M,N]``."""
+    m, k = x.shape
+    k2, n = w_i8.shape
+    assert k == k2, (x.shape, w_i8.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, bm, bn, bk)
+
+    return pl.pallas_call(
+        _dequant_matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_i8, w_scale)

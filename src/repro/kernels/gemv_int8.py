@@ -1,0 +1,116 @@
+"""W8A8 tiled matmul/GEMV Pallas kernel — the "native instruction" path.
+
+The paper's §III-B finding is that the UPMEM compiler silently lowers INT8
+multiply to a 32-step software routine (`__mulsi3`) instead of the 1-cycle
+native `MUL_SL_SL`.  The TPU equivalent of that anti-pattern is dequantizing
+int8 operands to bf16/f32 *before* the contraction — which halves MXU
+throughput (197 vs 394 TOPS) and doubles VMEM traffic.  This kernel keeps
+both operands int8 all the way into the MXU and accumulates int32, applying
+the float scales exactly once on the final K step.
+
+Tiling (the NI×8 "load wide blocks" analogue): BlockSpecs stage
+``(bm, bk) × (bk, bn)`` int8 tiles HBM→VMEM; ``bk`` is the innermost grid
+axis so the int32 accumulator tile lives in a VMEM scratch across the K
+sweep and the output is written once.  Tile defaults are MXU-aligned
+(multiples of (32, 128) for int8 operands).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
+    """Grid: (M/bm, N/bn, K/bk); K innermost for VMEM accumulation."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 × int8 → int32 on the MXU: the MUL_SL_SL analogue.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _finalize():
+        acc = acc_ref[...].astype(jnp.float32)
+        # per-token [bm, 1] × per-channel [1, bn] scales, fused (no extra pass)
+        o_ref[...] = acc * xs_ref[...] * ws_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_int32")
+)
+def matmul_int8(
+    x: jax.Array,
+    w: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+    out_int32: bool = False,
+):
+    """``[M,K] int8 @ [K,N] int8`` with fused scale application → f32 ``[M,N]``.
+
+    Shapes must already be padded to the block sizes (see
+    :func:`repro.kernels.ops.quant_matmul` for the padding wrapper).
+    ``x_scale [M,1]`` per-token, ``w_scale [1,N]`` per-channel.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w.shape, bm, bn, bk)
+
+    kernel = _matmul_int8_kernel
+    if out_int32:
+        kernel = _matmul_int8_kernel_i32
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (m, n), jnp.int32 if out_int32 else jnp.float32
+        ),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, w, x_scale, w_scale)
+
+
+def _matmul_int8_kernel_i32(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
+    """Variant returning the raw int32 accumulator (exactness tests)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]

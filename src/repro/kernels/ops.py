@@ -1,0 +1,258 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These handle everything the raw kernels require of their callers:
+
+* **padding** of M/N/K to block multiples (zeros are exact for every integer
+  path here) and slicing the result back;
+* **block-size selection** that respects both the problem shape and MXU/VPU
+  tile alignment;
+* **interpret-mode dispatch**: on non-TPU backends (this container is
+  CPU-only) kernels execute with ``interpret=True``, which runs the kernel
+  body in Python per grid step — bit-exact semantics, no TPU required;
+* scale plumbing from :class:`repro.core.quant.QuantTensor`.
+
+Every wrapper has a matching oracle in :mod:`repro.kernels.ref` and a
+shape/dtype sweep test in ``tests/test_kernels_*.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.core.quant import QuantTensor
+from repro.kernels import bsdp_kernel, dequant_gemv, dim_kernel, gemv_int4, gemv_int8
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    return (not _on_tpu()) if flag is None else flag
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pick_block(dim: int, preferred: int, align: int) -> int:
+    """Largest aligned block ≤ preferred that does not over-pad tiny dims."""
+    if dim >= preferred:
+        return preferred
+    return max(align, _round_up(dim, align))
+
+
+def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+# ---------------------------------------------------------------------------
+# W8A8
+# ---------------------------------------------------------------------------
+
+
+def quant_matmul(
+    x: QuantTensor,
+    w: QuantTensor,
+    *,
+    interpret: Optional[bool] = None,
+    out_int32: bool = False,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """W8A8 matmul: ``x [M,K] per-token  ×  w [K,N] per-channel → f32 [M,N]``."""
+    m, k = x.data.shape
+    k2, n = w.data.shape
+    assert k == k2
+    bm = bm or _pick_block(m, 128, 8)
+    bn = bn or _pick_block(n, 128, 128)
+    bk = bk or _pick_block(k, 512, 128)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xd = _pad2(x.data, mp, kp)
+    wd = _pad2(w.data, kp, np_)
+    xs = _pad2(x.scale.reshape(m, 1), mp, 1)
+    ws = _pad2(w.scale.reshape(1, n), 1, np_)
+    out = gemv_int8.matmul_int8(
+        xd, wd, xs, ws, bm=bm, bn=bn, bk=bk,
+        interpret=_interpret(interpret), out_int32=out_int32,
+    )
+    return out[:m, :n]
+
+
+def matmul_int8_raw(
+    x_i8: jax.Array, w_i8: jax.Array, *, interpret: Optional[bool] = None, **blocks
+) -> jax.Array:
+    """Scale-free exact int32 W8A8 matmul (tests, DIM building block)."""
+    m, k = x_i8.shape
+    n = w_i8.shape[1]
+    ones_m = jnp.ones((m, 1), jnp.float32)
+    ones_n = jnp.ones((1, n), jnp.float32)
+    x = QuantTensor(data=x_i8, scale=ones_m, bits=8, axis=-1)
+    w = QuantTensor(data=w_i8, scale=ones_n, bits=8, axis=0)
+    return quant_matmul(x, w, interpret=interpret, out_int32=True, **blocks)
+
+
+# ---------------------------------------------------------------------------
+# W4A8 packed
+# ---------------------------------------------------------------------------
+
+
+def quant_matmul_int4(
+    x: QuantTensor,
+    w_packed: jax.Array,
+    w_scale: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """W4A8: ``x [M,K] int8 × packed w [K//2,N] → f32 [M,N]``.
+
+    K must be even (int4 pairs).  Padding K pads *pairs*, which is exact.
+    """
+    m, k = x.data.shape
+    k2, n = w_packed.shape
+    assert k == 2 * k2, (x.data.shape, w_packed.shape)
+    bm = bm or _pick_block(m, 128, 8)
+    bn = bn or _pick_block(n, 128, 128)
+    bk = bk or _pick_block(k, 512, 256)  # must stay even after padding
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xd = _pad2(x.data, mp, kp)
+    wd = _pad2(w_packed, kp // 2, np_)
+    xs = _pad2(x.scale.reshape(m, 1), mp, 1)
+    ws = _pad2(w_scale.reshape(1, n), 1, np_)
+    out = gemv_int4.matmul_int4_packed(
+        xd, wd, xs, ws, bm=bm, bn=bn, bk=bk, interpret=_interpret(interpret)
+    )
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# BSDP (bit-plane int4 × int4)
+# ---------------------------------------------------------------------------
+
+
+def bsdp_matmul_planes(
+    x_planes: jax.Array,
+    w_planes: jax.Array,
+    *,
+    signed: bool = True,
+    interpret: Optional[bool] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bkw: Optional[int] = None,
+) -> jax.Array:
+    """Plane-form BSDP: ``[M,4,Kw] × [N,4,Kw] → int32 [M,N]`` (exact)."""
+    m, _, kw = x_planes.shape
+    n = w_planes.shape[0]
+    bm = bm or _pick_block(m, 8, 8)
+    bn = bn or _pick_block(n, 128, 128)
+    bkw = bkw or _pick_block(kw, 64, 8)
+    mp, np_, kwp = _round_up(m, bm), _round_up(n, bn), _round_up(kw, bkw)
+
+    def pad3(p, d0, d2):
+        return jnp.pad(p, ((0, d0 - p.shape[0]), (0, 0), (0, d2 - p.shape[2])))
+
+    out = bsdp_kernel.bsdp_matmul(
+        pad3(x_planes, mp, kwp),
+        pad3(w_planes, np_, kwp),
+        bm=bm, bn=bn, bkw=bkw, signed=signed, interpret=_interpret(interpret),
+    )
+    return out[:m, :n]
+
+
+def bsdp_gemv(
+    x_i4: jax.Array,
+    w_planes: jax.Array,
+    *,
+    signed: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """End-to-end: raw int4 activations ``[M,K]`` × encoded weights
+    ``[N,4,K/32]`` → int32 ``[M,N]``.  Activation bit-plane encode is fused
+    under the same jit (the per-request transform the paper calls
+    "negligible compared to broadcast cost")."""
+    x_planes = bitplane.encode_acts(bitplane.pad_to_word(x_i4))
+    return bsdp_matmul_planes(x_planes, w_planes, signed=signed, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# DIM (W16A8)
+# ---------------------------------------------------------------------------
+
+
+def dim_matmul(
+    x_i8: jax.Array,
+    w_i16: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """Exact ``[M,K] int8 @ [K,N] int16 → int32`` via decomposed int8 passes."""
+    m, k = x_i8.shape
+    k2, n = w_i16.shape
+    assert k == k2
+    bm = bm or _pick_block(m, 128, 8)
+    bn = bn or _pick_block(n, 128, 128)
+    bk = bk or _pick_block(k, 256, 128)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    out = dim_kernel.matmul_w16a8(
+        _pad2(x_i8, mp, kp),
+        _pad2(w_i16, kp, np_),
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(interpret),
+    )
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# W8A16 weight-only
+# ---------------------------------------------------------------------------
+
+
+def weight_only_matmul(
+    x: jax.Array,
+    w: QuantTensor,
+    *,
+    interpret: Optional[bool] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """W8A16: float activations × int8 weights, dequant fused in-kernel."""
+    m, k = x.shape
+    k2, n = w.data.shape
+    assert k == k2
+    bm = bm or _pick_block(m, 128, 8)
+    bn = bn or _pick_block(n, 128, 128)
+    bk = bk or _pick_block(k, 512, 128)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    out = dequant_gemv.dequant_matmul(
+        _pad2(x, mp, kp),
+        _pad2(w.data, kp, np_),
+        _pad2(w.scale.reshape(1, n), 1, np_),
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(interpret),
+    )
+    return out[:m, :n]
+
+
+__all__ = [
+    "quant_matmul",
+    "matmul_int8_raw",
+    "quant_matmul_int4",
+    "bsdp_matmul_planes",
+    "bsdp_gemv",
+    "dim_matmul",
+    "weight_only_matmul",
+]

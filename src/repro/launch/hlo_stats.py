@@ -1,0 +1,145 @@
+"""Post-SPMD HLO analysis: collective bytes, per-op tallies, roofline terms.
+
+``collective_stats(compiled_text)`` parses the optimized (partitioned) HLO
+and tallies wire bytes per device for every collective:
+
+    op kind               wire bytes per device (ring schedule)
+    -------------------   -------------------------------------
+    all-reduce            2 · size · (n-1)/n
+    all-gather            out_size · (n-1)/n
+    reduce-scatter        in_size · (n-1)/n
+    all-to-all            size · (n-1)/n
+    collective-permute    size
+
+where n is the participant-group size parsed from replica_groups.  Sizes
+come from the result-shape type strings (tuple results summed).  These are
+the collective-term inputs of EXPERIMENTS.md §Roofline; the 'bottleneck
+link' model divides by one ICI link (intra-pod axes) or one DCN link
+('pod' axis groups) — assumptions documented there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRCDST_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float  # per-device bytes over the bottleneck link model
+    by_kind: dict
+    count: int
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    wire = 0.0
+    by_kind: dict = defaultdict(lambda: {"count": 0, "bytes": 0.0, "raw_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        # participant group size
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            first_group = g.group(1)
+            n = len([x for x in first_group.split(",") if x.strip() != ""])
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        if kind == "collective-permute":
+            b = float(size)
+        elif n <= 1:
+            b = 0.0
+        elif kind == "all-reduce":
+            b = 2.0 * size * (n - 1) / n
+        elif kind == "all-gather":
+            b = float(size) * (n - 1) / n  # size is the gathered output
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; ring moves in_size*(n-1)/n =
+            # out_size*(n-1) bytes per device
+            b = float(size) * (n - 1)
+        elif kind == "all-to-all":
+            b = float(size) * (n - 1) / n
+        else:
+            b = float(size)
+        wire += b
+        by_kind[kind]["count"] += 1
+        by_kind[kind]["bytes"] += b
+        by_kind[kind]["raw_bytes"] += size
+    return CollectiveStats(wire_bytes=wire, by_kind=dict(by_kind), count=sum(
+        v["count"] for v in by_kind.values()
+    ))
+
+
+# TPU v5e hardware constants (per chip) — single source of truth.
+HW = {
+    "bf16_flops": 197e12,
+    "int8_ops": 394e12,
+    "hbm_bw": 819e9,
+    "ici_link_bw": 50e9,  # per link; v5e has 4 links/chip (2-D torus)
+    "hbm_bytes": 16e9,
+}
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    wire_bytes: float,
+    *,
+    int8_fraction: float = 0.0,
+) -> dict:
+    """Per-device roofline seconds for the three terms.
+
+    ``int8_fraction`` credits that fraction of the FLOPs at the 2× int8
+    MXU rate (the paper's NI story shows up here).
+    """
+    peak = HW["bf16_flops"]
+    eff_flops = flops * (1 - int8_fraction) + flops * int8_fraction / 2.0
+    t_compute = eff_flops / peak
+    t_memory = hbm_bytes / HW["hbm_bw"]
+    t_coll = wire_bytes / HW["ici_link_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "dominant": dominant,
+        "step_lower_bound": max(t_compute, t_memory, t_coll),
+    }

@@ -1,0 +1,569 @@
+"""Attention mixers: GQA (+bias/qk_norm/SWA), MLA, cross-attention.
+
+Memory discipline: prefill/train attention is **chunked online-softmax**
+(flash-attention recurrence in pure JAX: ``lax.scan`` over KV chunks,
+running (m, l, acc) carry) so a 32k-token prefill never materializes an
+S×S score matrix — per-step live memory is O(chunk_q × chunk_kv).  The
+same code path handles causal masks and sliding windows via position
+arithmetic, and shards cleanly when the KV sequence axis is partitioned
+(long-context decode: XLA turns the running max/sum reductions into the
+flash-decoding partial-softmax combine).
+
+Decode caches are position-indexed ring buffers: a cache of length L holds
+(k, v, pos_ids); slot = position mod L.  With L = max_len this is a plain
+cache; with L = window it implements sliding-window eviction exactly.
+
+MLA (DeepSeek-V2 / MiniCPM3) caches only the **latent** (kv_lora + rope
+key) — itself a "shrink the resident bytes" technique that composes with
+the paper's quantization story — and decodes in the *absorbed* form
+(q absorbed through W_uk; context read back through W_uv), which is the
+production decode path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import dense
+from repro.sharding.partitioning import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attn_dims(cfg, tp: int = 1) -> tuple[int, int, bool]:
+    """(padded_heads, padded_kv_heads, shard_kv) for a model-axis of size tp.
+
+    Heads pad to a multiple of tp.  KV heads shard only if padding preserves
+    the GQA group structure (Hp/Hkvp == H/kv); otherwise they replicate.
+    """
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    hp = -(-h // tp) * tp
+    if kv % tp == 0:
+        return hp, kv, True
+    kvp = -(-kv // tp) * tp
+    if kv and hp % kvp == 0 and hp // kvp == h // kv:
+        return hp, kvp, True
+    return hp, kv, False
+
+
+# ---------------------------------------------------------------------------
+# GQA specs / apply
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg, tp: int = 1) -> dict:
+    hp, kvp, _ = attn_dims(cfg, tp)
+    dh = cfg.d_head
+    d = {
+        "wq": ParamSpec((cfg.d_model, hp * dh), cfg.dtype, ("embed", "heads")),
+        "wk": ParamSpec((cfg.d_model, kvp * dh), cfg.dtype, ("embed", "kv_heads")),
+        "wv": ParamSpec((cfg.d_model, kvp * dh), cfg.dtype, ("embed", "kv_heads")),
+        "wo": ParamSpec((hp * dh, cfg.d_model), cfg.dtype, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamSpec((hp * dh,), jnp.float32, ("heads",), "zeros")
+        d["bk"] = ParamSpec((kvp * dh,), jnp.float32, ("kv_heads",), "zeros")
+        d["bv"] = ParamSpec((kvp * dh,), jnp.float32, ("kv_heads",), "zeros")
+    if cfg.qk_norm:
+        d["q_norm"] = ParamSpec((dh,), jnp.float32, ("head_dim",), "ones")
+        d["k_norm"] = ParamSpec((dh,), jnp.float32, ("head_dim",), "ones")
+    return d
+
+
+def _project_qkv(params, x, cfg, tp, positions, impl=None):
+    hp, kvp, _ = attn_dims(cfg, tp)
+    dh = cfg.d_head
+    b, s, _ = x.shape
+    q = dense(params["wq"], x, impl=impl)
+    k = dense(params["wk"], x, impl=impl)
+    v = dense(params["wv"], x, impl=impl)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, hp, dh)
+    k = k.reshape(b, s, kvp, dh)
+    v = v.reshape(b, s, kvp, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"])
+        k = layers.rms_norm(k, params["k_norm"])
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    tp: int = 1,
+    positions: Optional[jax.Array] = None,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+    impl=None,
+) -> jax.Array:
+    """Full-sequence causal (optionally windowed) attention — train/prefill."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _project_qkv(params, x, cfg, tp, positions, impl=impl)
+    out = chunked_attention(
+        q, k, v,
+        q_pos=positions, kv_pos=positions,
+        causal=True, window=cfg.sliding_window,
+        chunk_q=chunk_q, chunk_kv=chunk_kv,
+    )
+    out = out.reshape(b, s, -1)
+    return dense(params["wo"], out, impl=impl)
+
+
+def gqa_prefill(params, x, cfg, *, tp, cache_len, positions=None, impl=None,
+                chunk_q=512, chunk_kv=1024):
+    """Prefill: returns (output, cache).  Handles cache_len < S (SWA ring)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _project_qkv(params, x, cfg, tp, positions, impl=impl)
+    out = chunked_attention(
+        q, k, v, q_pos=positions, kv_pos=positions,
+        causal=True, window=cfg.sliding_window,
+        chunk_q=chunk_q, chunk_kv=chunk_kv,
+    )
+    out = dense(params["wo"], out.reshape(b, s, -1), impl=impl)
+    cache = init_kv_cache(cfg, b, cache_len, tp=tp, dtype=k.dtype)
+    cache = _ring_write(cache, k, v, positions)
+    return out, cache
+
+
+def gqa_decode(params, x, cache, cfg, *, tp, pos, impl=None):
+    """One-token decode against the ring cache.
+
+    x: [B, 1, D]; pos: scalar or per-slot [B] int32 (continuous batching)."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q, k, v = _project_qkv(params, x, cfg, tp, positions, impl=impl)
+    cache = _ring_write(cache, k, v, positions)
+    out = _decode_attention(
+        q, cache["k"], cache["v"], cache["pos_ids"],
+        cur=pos, window=cfg.sliding_window,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+    )
+    out = dense(params["wo"], out.reshape(b, 1, -1), impl=impl)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Ring KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, *, tp: int = 1, dtype=None):
+    _, kvp, _ = attn_dims(cfg, tp)
+    dtype = dtype or cfg.dtype
+    if cfg.kv_quant:
+        # int8 payload + per-(slot, head) scales — the paper's shrink-the-
+        # resident-bytes move applied to the decode cache (SPerf P1)
+        cache = {
+            "k": jnp.zeros((batch, cache_len, kvp, cfg.d_head), jnp.int8),
+            "v": jnp.zeros((batch, cache_len, kvp, cfg.d_head), jnp.int8),
+            "k_scale": jnp.zeros((batch, cache_len, kvp), jnp.float32),
+            "v_scale": jnp.zeros((batch, cache_len, kvp), jnp.float32),
+            "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
+        }
+        return cache
+    return {
+        "k": jnp.zeros((batch, cache_len, kvp, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, cache_len, kvp, cfg.d_head), dtype),
+        # absolute position held in each slot; -1 = empty
+        "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _quant_slots(x):
+    """[B,S,H,D] -> int8 payload + per-(B,S,H) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _ring_write(cache, k, v, positions):
+    """Scatter S new (k, v) at slots = position mod L (exact SWA eviction)."""
+    ln = cache["k"].shape[1]
+    slots = positions % ln  # [B, S]
+    b_idx = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quant_slots(k)
+        vq, vs = _quant_slots(v)
+        out["k"] = cache["k"].at[b_idx, slots].set(kq)
+        out["v"] = cache["v"].at[b_idx, slots].set(vq)
+        out["k_scale"] = cache["k_scale"].at[b_idx, slots].set(ks)
+        out["v_scale"] = cache["v_scale"].at[b_idx, slots].set(vs)
+    else:
+        out["k"] = cache["k"].at[b_idx, slots].set(k.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[b_idx, slots].set(v.astype(cache["v"].dtype))
+    out["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(positions)
+    return out
+
+
+def _decode_attention(q, k, v, pos_ids, *, cur, window,
+                      k_scale=None, v_scale=None):
+    """q: [B,1,H,D] vs full cache [B,L,Hkv,D]; mask by stored positions.
+
+    cur: per-row current position [B].  When the cache L axis is sharded
+    (long-context sequence parallelism) the max/sum reductions below become
+    the flash-decoding combine.
+
+    int8 cache (k_scale/v_scale given): per-slot scales are constant over
+    the head dim, so dequantization FOLDS AFTER the contraction —
+    ``scores = (q·k_int8)·scale`` and ``out = (w·v_scale)·v_int8`` — the
+    same scale-in-epilogue trick as the quantized matmul kernels; the f32
+    cache copy is never materialized.
+    """
+    b, _, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,blhd->bhgql", qg, k.astype(jnp.float32))
+    if k_scale is not None:
+        scores = scores * jnp.moveaxis(k_scale, 2, 1)[:, :, None, None, :]
+    scores = scores / math.sqrt(dh)
+    cur = jnp.broadcast_to(jnp.asarray(cur, jnp.int32), (b,))
+    valid = (pos_ids >= 0) & (pos_ids <= cur[:, None])
+    if window is not None:
+        valid &= pos_ids > (cur[:, None] - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        w = w * jnp.moveaxis(v_scale, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bhgql,blhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (flash recurrence in pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    *,
+    q_pos: jax.Array,  # [B, Sq]
+    kv_pos: jax.Array,  # [B, Skv]
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    # pad seq dims to chunk multiples (padded kv masked out via positions)
+    pq, pkv = (-sq) % cq, (-skv) % ckv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=0)
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pkv)), constant_values=-1)
+    nq, nkv = q.shape[1] // cq, k.shape[1] // ckv
+
+    qc = q.reshape(b, nq, cq, hkv, g, dh).astype(jnp.float32)
+    qp = q_pos.reshape(b, nq, cq)
+    kc = k.reshape(b, nkv, ckv, hkv, dh).astype(jnp.float32)
+    vc = v.reshape(b, nkv, ckv, hkv, dh).astype(jnp.float32)
+    kp = kv_pos.reshape(b, nkv, ckv)
+    scale = 1.0 / math.sqrt(dh)
+
+    def one_q_chunk(qi, qpi):
+        # qi: [B, cq, Hkv, G, D]; scan the flash recurrence over KV chunks.
+        def body(carry, inp):
+            m, l, acc = carry
+            kj, vj, kpj = inp  # [B, ckv, Hkv, D], ..., [B, ckv]
+            s = jnp.einsum("bqhgd,bshd->bhgqs", qi, kj) * scale
+            mask = kpj[:, None, None, None, :] >= 0
+            if causal:
+                mask &= qpi[:, None, None, :, None] >= kpj[:, None, None, None, :]
+            if window is not None:
+                mask &= (
+                    qpi[:, None, None, :, None] - kpj[:, None, None, None, :]
+                ) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqs,bshd->bhgqd", p, vj
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kc, 1, 0),
+                jnp.moveaxis(vc, 1, 0),
+                jnp.moveaxis(kp, 1, 0),
+            ),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bhgqd->bqhgd", out)  # [B, cq, Hkv, G, D]
+
+    out = jax.vmap(one_q_chunk, in_axes=(1, 1), out_axes=1)(qc, qp)
+    out = out.reshape(b, nq * cq, hq, dh)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_dims(cfg, tp: int = 1) -> int:
+    return -(-cfg.n_heads // tp) * tp
+
+
+def mla_specs(cfg, tp: int = 1) -> dict:
+    hp = mla_dims(cfg, tp)
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    d: dict = {
+        "w_dkv": ParamSpec((cfg.d_model, r + dr), cfg.dtype, ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((r,), jnp.float32, ("norm",), "ones"),
+        "w_uk": ParamSpec((r, hp * dn), cfg.dtype, ("kv_lora", "heads")),
+        "w_uv": ParamSpec((r, hp * dv), cfg.dtype, ("kv_lora", "heads")),
+        "wo": ParamSpec((hp * dv, cfg.d_model), cfg.dtype, ("heads", "embed")),
+    }
+    if cfg.q_lora_rank:
+        d["w_dq"] = ParamSpec(
+            (cfg.d_model, cfg.q_lora_rank), cfg.dtype, ("embed", "kv_lora")
+        )
+        d["q_norm"] = ParamSpec((cfg.q_lora_rank,), jnp.float32, ("norm",), "ones")
+        d["w_uq"] = ParamSpec(
+            (cfg.q_lora_rank, hp * (dn + dr)), cfg.dtype, ("kv_lora", "heads")
+        )
+    else:
+        d["wq"] = ParamSpec(
+            (cfg.d_model, hp * (dn + dr)), cfg.dtype, ("embed", "heads")
+        )
+    return d
+
+
+def _mla_q(params, x, cfg, hp, positions, impl=None):
+    b, s, _ = x.shape
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = layers.rms_norm(dense(params["w_dq"], x, impl=impl), params["q_norm"])
+        q = dense(params["w_uq"], cq, impl=impl)
+    else:
+        q = dense(params["wq"], x, impl=impl)
+    q = q.reshape(b, s, hp, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, x, cfg, positions, impl=None):
+    b, s, _ = x.shape
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = dense(params["w_dkv"], x, impl=impl)
+    c_kv = layers.rms_norm(ckv[..., :r], params["kv_norm"])
+    k_rope = ckv[..., r:].reshape(b, s, 1, dr)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope  # [B,S,r], [B,S,dr]
+
+
+def mla_apply(params, x, cfg, *, tp=1, positions=None, impl=None, cache_len=None,
+              chunk_q=512, chunk_kv=1024):
+    """Train/prefill MLA.  Returns output (and cache if cache_len given)."""
+    b, s, _ = x.shape
+    hp = mla_dims(cfg, tp)
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q_nope, q_rope = _mla_q(params, x, cfg, hp, positions, impl=impl)
+    c_kv, k_rope = _mla_latent(params, x, cfg, positions, impl=impl)
+    # expand latent -> per-head k/v (standard prefill form)
+    k_nope = dense(params["w_uk"], c_kv, impl=impl).reshape(b, s, hp, dn)
+    v = dense(params["w_uv"], c_kv, impl=impl).reshape(b, s, hp, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, hp, dr))], axis=-1
+    )
+    # pad v to q_head_dim for the shared kernel, slice after
+    out = chunked_attention(
+        q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+        q_pos=positions, kv_pos=positions, causal=True,
+        chunk_q=chunk_q, chunk_kv=chunk_kv,
+    )[..., :dv]
+    out = dense(params["wo"], out.reshape(b, s, hp * dv), impl=impl)
+    if cache_len is None:
+        return out
+    cache = init_mla_cache(cfg, b, cache_len, dtype=c_kv.dtype)
+    cache = _mla_write(cache, c_kv, k_rope, positions)
+    return out, cache
+
+
+def init_mla_cache(cfg, batch, cache_len, dtype=None):
+    dtype = dtype or cfg.dtype
+    if cfg.kv_quant:
+        return {
+            "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), jnp.int8),
+            "c_scale": jnp.zeros((batch, cache_len), jnp.float32),
+            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+            "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
+        }
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+        "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _mla_write(cache, c_kv, k_rope, positions):
+    ln = cache["c_kv"].shape[1]
+    slots = positions % ln
+    b_idx = jnp.arange(c_kv.shape[0], dtype=jnp.int32)[:, None]
+    out = dict(cache)
+    if "c_scale" in cache:
+        amax = jnp.max(jnp.abs(c_kv.astype(jnp.float32)), axis=-1)
+        scale = jnp.maximum(amax, 1e-6) / 127.0
+        q = jnp.clip(
+            jnp.round(c_kv.astype(jnp.float32) / scale[..., None]), -127, 127
+        ).astype(jnp.int8)
+        out["c_kv"] = cache["c_kv"].at[b_idx, slots].set(q)
+        out["c_scale"] = cache["c_scale"].at[b_idx, slots].set(scale)
+    else:
+        out["c_kv"] = cache["c_kv"].at[b_idx, slots].set(
+            c_kv.astype(cache["c_kv"].dtype)
+        )
+    out["k_rope"] = cache["k_rope"].at[b_idx, slots].set(
+        k_rope.astype(cache["k_rope"].dtype)
+    )
+    out["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(positions)
+    return out
+
+
+def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
+    """Absorbed-form MLA decode: score and read in the latent space."""
+    b = x.shape[0]
+    hp = mla_dims(cfg, tp)
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(params, x, cfg, hp, positions, impl=impl)  # [B,1,H,*]
+    c_kv_new, k_rope_new = _mla_latent(params, x, cfg, positions, impl=impl)
+    cache = _mla_write(cache, c_kv_new, k_rope_new, positions)
+
+    # absorbed decode requires the float matrix; quantized residency applies
+    # to the projections above, while absorption stays in the latent space.
+    w_uk_f = _as_float(params["w_uk"], (r, hp, dn), x.dtype)
+    w_uv_f = _as_float(params["w_uv"], (r, hp, dv), x.dtype)
+
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk_f.astype(jnp.float32))  # [B,1,H,r]
+    ckv = cache["c_kv"].astype(jnp.float32)  # [B,L,r] (int8 payload or bf16)
+    c_scale = cache.get("c_scale")  # [B,L] when kv_quant
+    krope = cache["k_rope"].astype(jnp.float32)  # [B,L,dr]
+    s_nope = jnp.einsum("bqhr,blr->bhql", q_abs, ckv)
+    if c_scale is not None:  # dequant folded after the contraction
+        s_nope = s_nope * c_scale[:, None, None, :]
+    scores = (
+        s_nope
+        + jnp.einsum("bqhd,bld->bhql", q_rope.astype(jnp.float32), krope)
+    ) / math.sqrt(dn + dr)
+    valid = (cache["pos_ids"] >= 0) & (cache["pos_ids"] <= pos[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if c_scale is not None:
+        w = w * c_scale[:, None, None, :]
+    ctx_lat = jnp.einsum("bhql,blr->bqhr", w, ckv)  # [B,1,H,r]
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, w_uv_f.astype(jnp.float32))
+    out = dense(params["wo"], out.reshape(b, 1, hp * dv).astype(x.dtype), impl=impl)
+    return out, cache
+
+
+def _as_float(w, shape3, dtype):
+    """Reshape a (possibly quantized) up-projection to [r, H, d] float."""
+    from repro.core import qlinear as _ql
+
+    if isinstance(w, _ql.QuantLinearState):
+        if w.mode in ("w8a16", "w8a8"):
+            mat = w.data.astype(jnp.float32) * w.scale
+        elif w.mode == "bf16":
+            mat = w.data.astype(jnp.float32)
+        else:  # packed formats: decode via the jnp reference path
+            from repro.core import quant as _q
+
+            if w.mode == "w4a8":
+                mat = _q.unpack_int4(w.data, axis=0).astype(jnp.float32) * w.scale
+            else:
+                from repro.kernels import ref as _ref
+
+                mat = _ref.decode_weights_ref(w.data).astype(jnp.float32) * w.scale
+            mat = mat[: w.k]
+        return mat.reshape(shape3).astype(dtype)
+    return w.reshape(shape3).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (vision / encoder-decoder memory)
+# ---------------------------------------------------------------------------
+
+
+def cross_specs(cfg, tp: int = 1) -> dict:
+    hp, kvp, _ = attn_dims(cfg, tp)
+    dh = cfg.d_head
+    return {
+        "wq": ParamSpec((cfg.d_model, hp * dh), cfg.dtype, ("embed", "heads")),
+        "wk": ParamSpec((cfg.d_model, kvp * dh), cfg.dtype, ("embed", "kv_heads")),
+        "wv": ParamSpec((cfg.d_model, kvp * dh), cfg.dtype, ("embed", "kv_heads")),
+        "wo": ParamSpec((hp * dh, cfg.d_model), cfg.dtype, ("heads", "embed")),
+        "gate": ParamSpec((), jnp.float32, (), "zeros"),  # llama-vision tanh gate
+    }
+
+
+def cross_kv(params, ctx: jax.Array, cfg, *, tp=1, impl=None):
+    """Project encoder memory once; reused across decode steps."""
+    b, s, _ = ctx.shape
+    _, kvp, _ = attn_dims(cfg, tp)
+    k = dense(params["wk"], ctx, impl=impl).reshape(b, s, kvp, cfg.d_head)
+    v = dense(params["wv"], ctx, impl=impl).reshape(b, s, kvp, cfg.d_head)
+    return {"ck": k, "cv": v}
+
+
+def cross_apply(params, x, kv, cfg, *, tp=1, gated=True, impl=None,
+                chunk_q=512, chunk_kv=1024):
+    """x: [B,S,D] attends over precomputed ctx kv (no mask, no rope)."""
+    b, s, _ = x.shape
+    hp, kvp, _ = attn_dims(cfg, tp)
+    dh = cfg.d_head
+    q = dense(params["wq"], x, impl=impl).reshape(b, s, hp, dh)
+    k, v = kv["ck"], kv["cv"]
+    skv = k.shape[1]
+    qpos = jnp.zeros((b, s), jnp.int32)
+    kpos = jnp.zeros((b, skv), jnp.int32)
+    out = chunked_attention(
+        q, k, v, q_pos=qpos, kv_pos=kpos, causal=False, window=None,
+        chunk_q=chunk_q, chunk_kv=chunk_kv,
+    )
+    out = dense(params["wo"], out.reshape(b, s, -1), impl=impl)
+    if gated:
+        out = jnp.tanh(params["gate"]).astype(out.dtype) * out
+    return out

@@ -1,0 +1,197 @@
+"""Shared model layers: norms, embeddings, RoPE, MLPs, dense dispatch.
+
+Everything is functional: ``*_specs(cfg)`` returns a ParamSpec tree,
+``*_apply(params, ...)`` consumes materialized (or quantized) params.
+
+``dense()`` is the single projection entry point used by every block: when
+a weight leaf has been converted to a :class:`QuantLinearState` by
+``serve.convert`` it dispatches to the paper's quantized GEMV kernels,
+otherwise it is a plain dtype matmul.  This is how the paper's technique
+becomes a first-class, per-layer-selectable feature of the framework.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.sharding.partitioning import ParamSpec
+
+
+def dense(w, x: jax.Array, impl: Optional[str] = None) -> jax.Array:
+    """``x [..., K] @ w [K, N]`` — float path or quantized-residency path."""
+    if isinstance(w, qlinear.QuantLinearState):
+        interpret = None if impl != "jnp" else None
+        if impl == "jnp":
+            return _qlinear_jnp(w, x)
+        return qlinear.apply(w, x, interpret=interpret).astype(x.dtype)
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+def _qlinear_jnp(state: qlinear.QuantLinearState, x: jax.Array) -> jax.Array:
+    """jnp (non-Pallas) quantized path — used by the dry-run so the lowered
+    HLO carries the true int8/int4 FLOP and byte counts without interpret-
+    mode scaffolding.  Semantics match qlinear.apply exactly."""
+    from repro.core import bsdp, quant
+
+    mode = state.mode
+    if mode == "bf16":
+        return jnp.einsum("...k,kn->...n", x, state.data.astype(x.dtype))
+    if mode == "w8a16":
+        w = state.data.astype(x.dtype) * state.scale.astype(x.dtype)
+        return jnp.einsum("...k,kn->...n", x, w)
+    if mode == "w8a8":
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=8)
+        acc = jax.lax.dot_general(
+            xq.data, state.data, (((xq.data.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
+    if mode == "w4a8":
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=8)
+        w = quant.unpack_int4(state.data, axis=0)
+        acc = jax.lax.dot_general(
+            xq.data, w, (((xq.data.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
+    if mode == "w4a4_bsdp":
+        from repro.core import bitplane
+
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=4)
+        lead = xq.data.shape[:-1]
+        x2 = xq.data.reshape(-1, xq.data.shape[-1])
+        xp = bitplane.encode_acts(bitplane.pad_to_word(x2))
+        acc = bsdp.bsdp_matmul_planes(xp, state.data, signed=True)
+        out = acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
+        return out.reshape(*lead, state.n).astype(x.dtype)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamSpec((d,), jnp.float32, ("norm",), "ones"),
+            "bias": ParamSpec((d,), jnp.float32, ("norm",), "zeros"),
+        }
+    return {"scale": ParamSpec((d,), jnp.float32, ("norm",), "ones")}
+
+
+def norm_apply(params: dict, x: jax.Array, cfg) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + 1e-6) * params["scale"]
+    return y.astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (y * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab padded to shardable size)
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg, padded_vocab: int) -> dict:
+    d = {
+        "embedding": ParamSpec(
+            (padded_vocab, cfg.d_model), jnp.float32, ("vocab", "embed"),
+            "embedding", scale=1.0,
+        )
+    }
+    if not cfg.tie_embeddings:
+        d["head"] = ParamSpec(
+            (cfg.d_model, padded_vocab), cfg.dtype, ("embed", "vocab"), "normal"
+        )
+    return d
+
+
+def embed_apply(params: dict, tokens: jax.Array, cfg) -> jax.Array:
+    return params["embedding"].astype(cfg.dtype)[tokens]
+
+
+def logits_apply(params: dict, x: jax.Array, cfg, impl=None) -> jax.Array:
+    if cfg.tie_embeddings and "head" not in params:
+        # 1/sqrt(d) keeps tied logits in the same regime as a fan-in-scaled
+        # untied head (Gemma-style normalization)
+        return jnp.einsum(
+            "...d,vd->...v", x, params["embedding"].astype(x.dtype)
+        ) * (cfg.d_model ** -0.5)
+    return dense(params["head"], x, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [B, S, H, D] (D even); positions: [B, S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    if cfg.act == "gelu":
+        return {
+            "w_in": ParamSpec((cfg.d_model, d_ff), cfg.dtype, ("embed", "mlp")),
+            "w_out": ParamSpec((d_ff, cfg.d_model), cfg.dtype, ("mlp", "embed")),
+        }
+    # SwiGLU: fused [gate; up] projection
+    return {
+        "w_in": ParamSpec((cfg.d_model, 2 * d_ff), cfg.dtype, ("embed", "mlp")),
+        "w_out": ParamSpec((d_ff, cfg.d_model), cfg.dtype, ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg, impl=None) -> jax.Array:
+    h = dense(params["w_in"], x, impl=impl)
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    return dense(params["w_out"], h, impl=impl)
+
+
+def activation(h: jax.Array, act: str) -> jax.Array:
+    return jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)

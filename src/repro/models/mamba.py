@@ -1,0 +1,195 @@
+"""Mamba-1 selective-state-space block (falcon-mamba, jamba mixers).
+
+TPU adaptation notes (DESIGN.md §2): the CUDA selective-scan kernel keeps
+the [d_inner, d_state] state in SM shared memory and streams time steps —
+it never materializes the [S, d_inner, d_state] decay/input tensors.  The
+TPU-native equivalent here is a **chunk-local parallel scan**:
+
+  * the sequence is cut into chunks of ``chunk`` steps;
+  * a sequential ``lax.scan`` carries the [B, d_inner, n] state across
+    chunks;
+  * INSIDE the scan body the chunk's decay ``exp(dt·A)`` and input
+    ``dt·B·x`` tensors are built from the small per-chunk slices
+    (dt, B, C, x_conv — all O(B·c·d_inner)), solved with a log-depth
+    ``lax.associative_scan``, immediately contracted against C to the
+    [B, c, d_inner] output, and discarded;
+  * the body is ``jax.checkpoint``-ed so the backward pass recomputes the
+    chunk-local tensors instead of saving them.
+
+Peak live memory is O(B·chunk·d_inner·n) ≈ 67 MB for jamba-398B shapes —
+versus 8.6 GB per layer if decay/inp were materialized over the full
+sequence (the first dry-run iteration of EXPERIMENTS.md §Perf caught
+exactly that: 103 GB temp per device).
+
+Decode keeps O(1) state: (conv ring of d_conv-1 inputs, ssm state
+[d_inner, n]) — which is why long_500k decode is native for SSM archs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense
+from repro.sharding.partitioning import ParamSpec
+
+
+def mamba_specs(cfg) -> dict:
+    di, n, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank_actual
+    return {
+        "in_proj": ParamSpec((cfg.d_model, 2 * di), cfg.dtype, ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.d_conv, di), jnp.float32, ("conv", "mlp")),
+        "conv_b": ParamSpec((di,), jnp.float32, ("mlp",), "zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * n), cfg.dtype, ("mlp", "dt_rank")),
+        "dt_w": ParamSpec((dtr, di), jnp.float32, ("dt_rank", "mlp")),
+        "dt_b": ParamSpec((di,), jnp.float32, ("mlp",), "ssm_dt"),
+        "A_log": ParamSpec((di, n), jnp.float32, ("mlp", "ssm_state"), "ssm_a"),
+        "D": ParamSpec((di,), jnp.float32, ("mlp",), "ones"),
+        "out_proj": ParamSpec((di, cfg.d_model), cfg.dtype, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(params, x_in, cfg, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  conv_state: [B, d_conv-1, di] tail
+    of the previous segment (decode/chunked prefill continuity)."""
+    w = params["conv_w"]  # [d_conv, di]
+    dc = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x_in.shape[0], dc - 1, x_in.shape[2]), x_in.dtype)
+    else:
+        pad = conv_state.astype(x_in.dtype)
+    xp = jnp.concatenate([pad, x_in], axis=1).astype(jnp.float32)
+    out = sum(
+        xp[:, i : i + x_in.shape[1]] * w[i] for i in range(dc)
+    ) + params["conv_b"]
+    new_state = xp[:, -(dc - 1) :] if dc > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out).astype(x_in.dtype), new_state.astype(jnp.float32)
+
+
+def _scan_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+def _chunk_step(params, cfg, h0, dt_c, b_c, c_c, xc_c):
+    """One chunk: build decay/input locally, scan, contract against C.
+
+    dt_c: [B,c,di] f32; b_c/c_c: [B,c,n] f32; xc_c: [B,c,di] (post-conv).
+    Returns (y_c [B,c,di] f32, h_out [B,di,n] f32).
+    """
+    a = -jnp.exp(params["A_log"])  # [di, n]
+    decay = jnp.exp(dt_c[..., None] * a)  # [B,c,di,n] — chunk-local only
+    inp = (dt_c * xc_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+    pa, pb = jax.lax.associative_scan(_scan_combine, (decay, inp), axis=1)
+    h_all = pb + pa * h0[:, None]  # [B,c,di,n]
+    y_c = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+    return y_c, h_all[:, -1]
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    chunk: int = 64,
+    state: Optional[dict] = None,
+    return_state: bool = False,
+    impl=None,
+    unroll_chunks: bool = False,
+):
+    """Full-sequence selective SSM.  x: [B, S, D] → [B, S, D].
+
+    With ``return_state`` also returns {"conv": [B,dc-1,di], "ssm": [B,di,n]}
+    for decode continuation (prefill path).  ``unroll_chunks`` replaces the
+    chunk lax.scan with a Python loop (dry-run cost probes only).
+    """
+    b, s, _ = x.shape
+    di, n, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank_actual
+    xz = dense(params["in_proj"], x, impl=impl)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    x_conv, new_conv = _causal_conv(params, x_in, cfg, conv_state)
+
+    # small projections over the full sequence (O(B·S·di))
+    xdb = dense(params["x_proj"], x_conv, impl=impl)
+    dt_low, bmat, cmat = jnp.split(
+        xdb.astype(jnp.float32), [dtr, dtr + n], axis=-1
+    )
+    dt = jax.nn.softplus(dt_low @ params["dt_w"] + params["dt_b"])  # [B,S,di]
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        # padded steps: dt=0 ⇒ decay=1, input=0 ⇒ state carried unchanged
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        x_conv_p = jnp.pad(x_conv, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_conv_p = x_conv
+    nc = (s + pad) // c
+
+    def reshape_chunks(t):
+        return t.reshape(b, nc, c, *t.shape[2:])
+
+    dt_ch, b_ch, c_ch, xc_ch = map(reshape_chunks, (dt, bmat, cmat, x_conv_p))
+    h0 = (
+        state["ssm"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, di, n), jnp.float32)
+    )
+
+    body = jax.checkpoint(
+        lambda h, sl: _chunk_step(params, cfg, h, *sl)[::-1],
+        prevent_cse=False,
+    )
+
+    if unroll_chunks:
+        ys = []
+        h = h0
+        for i in range(nc):
+            y_c, h = _chunk_step(
+                params, cfg, h, dt_ch[:, i], b_ch[:, i], c_ch[:, i], xc_ch[:, i]
+            )
+            ys.append(y_c)
+        y = jnp.concatenate(ys, axis=1)
+        h_final = h
+    else:
+        h_final, y_ch = jax.lax.scan(
+            body,
+            h0,
+            (
+                jnp.moveaxis(dt_ch, 1, 0),
+                jnp.moveaxis(b_ch, 1, 0),
+                jnp.moveaxis(c_ch, 1, 0),
+                jnp.moveaxis(xc_ch, 1, 0),
+            ),
+        )
+        y = jnp.moveaxis(y_ch, 0, 1).reshape(b, nc * c, di)
+    y = y[:, :s]
+
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(params["out_proj"], y, impl=impl)
+    if return_state:
+        return out, {"conv": new_conv, "ssm": h_final}
+    return out
+
+
+def init_mamba_state(cfg, batch: int) -> dict:
+    di, n, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), jnp.float32),
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, state, cfg, *, impl=None):
+    """Single-token state update.  x: [B, 1, D] → ([B, 1, D], new state)."""
+    out, new_state = mamba_apply(
+        params, x, cfg, chunk=1, state=state, return_state=True, impl=impl
+    )
+    return out, new_state

@@ -1,0 +1,228 @@
+"""Top-level models: CausalLM, VLM (ctx-conditioned), Encoder-Decoder.
+
+Pure-function API used by train/serve/launch:
+
+    specs(cfg, tp)                         → ParamSpec tree (abstract-safe)
+    forward(params, batch, cfg, tp, ...)   → logits          (train path)
+    loss_fn(params, batch, cfg, tp, ...)   → (loss, metrics) (train path)
+    prefill(params, batch, cfg, tp, ...)   → (logits, caches)
+    decode_step(params, token, caches, pos, cfg, tp) → (logits, caches)
+
+Vocab is padded to a model-axis-shardable size; padded logits are masked
+with -inf before any softmax so the padding is numerically invisible.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, stack
+from repro.sharding.partitioning import ParamSpec, constrain, pad_dim
+
+NEG_INF = -1e30
+
+
+def padded_vocab(cfg, tp: int) -> int:
+    return pad_dim(cfg.vocab_size, tp) if cfg.vocab_size % tp else cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def specs(cfg, tp: int = 1) -> dict:
+    pv = padded_vocab(cfg, tp)
+    d: dict = {
+        "embed": layers.embed_specs(cfg, pv),
+        "final_norm": layers.norm_specs(cfg),
+        "stack": stack.stack_specs(cfg, tp),
+    }
+    if cfg.first_k_dense:
+        d["prefix"] = {
+            f"layer{i}": stack.slot_specs(cfg, kind, tp)
+            for i, kind in enumerate(cfg.prefix_layout())
+        }
+    if cfg.is_enc_dec:
+        enc_layout = (("attn", "dense"),)
+        d["encoder"] = {
+            "stack": stack.stack_specs(
+                cfg, tp, layout=enc_layout, n_blocks=cfg.n_enc_layers
+            ),
+            "final_norm": layers.norm_specs(cfg),
+        }
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec only; frontend embeddings arrive precomputed — STUB)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, enc_embeds: jax.Array, cfg, *, tp=1, rules=None, impl=None,
+           probe=False, n_enc=None):
+    x, _, _ = stack.stack_apply(
+        params["encoder"]["stack"], enc_embeds.astype(cfg.dtype), cfg,
+        tp=tp, mode="train", layout=(("attn", "dense"),),
+        causal=False, rules=rules, impl=impl, probe=probe,
+    )
+    return layers.norm_apply(params["encoder"]["final_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss (train path)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_forward(
+    params, tokens, cfg, *, tp, mode, ctx=None, cache=None, pos=None,
+    cache_len=0, rules=None, impl=None, remat=False, probe=False,
+):
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    if rules is not None:
+        x = constrain(x, ("batch", "seq", "act_embed"), rules)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix_cache = {}
+    if cfg.first_k_dense:
+        for i, kind in enumerate(cfg.prefix_layout()):
+            key = f"layer{i}"
+            c = None if cache is None else cache["prefix"].get(key)
+            x, nc, aux = stack.slot_apply(
+                params["prefix"][key], x, cfg, kind, tp=tp, mode=mode,
+                cache=c, pos=pos, ctx=ctx, cache_len=cache_len,
+                rules=rules, impl=impl, probe=probe,
+            )
+            new_prefix_cache[key] = {} if nc is None else nc
+            aux_total = aux_total + aux
+    x, stack_cache, aux = stack.stack_apply(
+        params["stack"], x, cfg, tp=tp, mode=mode,
+        cache=None if cache is None else cache["stack"],
+        pos=pos, ctx=ctx, cache_len=cache_len, rules=rules, impl=impl,
+        remat=remat, probe=probe,
+    )
+    aux_total = aux_total + aux
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    new_cache = None
+    if mode != "train":
+        new_cache = {"prefix": new_prefix_cache, "stack": stack_cache}
+    return x, new_cache, aux_total
+
+
+def forward(
+    params, batch: dict, cfg, *, tp=1, rules=None, impl=None, remat=False,
+    probe=False,
+) -> tuple[jax.Array, jax.Array]:
+    """Train-path forward. batch: {tokens, (enc_embeds|ctx_embeds)?}.
+
+    Returns (logits [B,S,Vp], aux_loss).
+    """
+    ctx = None
+    if cfg.is_enc_dec:
+        ctx = encode(params, batch["enc_embeds"], cfg, tp=tp, rules=rules,
+                     impl=impl, probe=probe)
+    elif cfg.family == "vlm":
+        ctx = batch["ctx_embeds"].astype(cfg.dtype)
+    x, _, aux = _decoder_forward(
+        params, batch["tokens"], cfg, tp=tp, mode="train", ctx=ctx,
+        rules=rules, impl=impl, remat=remat, probe=probe,
+    )
+    logits = layers.logits_apply(params["embed"], x, cfg, impl=impl)
+    return logits, aux
+
+
+def _mask_pad_vocab(logits, cfg):
+    pv = logits.shape[-1]
+    if pv == cfg.vocab_size:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < cfg.vocab_size, logits, NEG_INF)
+
+
+def loss_fn(
+    params, batch: dict, cfg, *, tp=1, rules=None, impl=None, remat=False,
+    aux_weight: float = 0.01, z_weight: float = 1e-4, probe=False,
+):
+    """Next-token cross entropy (+MoE aux +z-loss). labels==-1 masked."""
+    logits, aux = forward(
+        params, batch, cfg, tp=tp, rules=rules, impl=impl, remat=remat,
+        probe=probe,
+    )
+    logits = _mask_pad_vocab(logits.astype(jnp.float32), cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll) / denom
+    z = jnp.sum(jnp.square(lse) * mask) / denom
+    total = ce + aux_weight * aux + z_weight * z
+    metrics = {"ce": ce, "aux": aux, "z": z, "tokens": jnp.sum(mask)}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving path
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params, batch: dict, cfg, *, tp=1, max_len: int, rules=None, impl=None,
+    probe=False,
+):
+    """Run the prompt, build decode caches.  Returns (last_logits, caches).
+
+    max_len bounds the decode horizon: attention caches are allocated at
+    ``min(max_len, sliding_window)`` ring length; mamba caches are O(1).
+    """
+    ctx = None
+    if cfg.is_enc_dec:
+        ctx = encode(params, batch["enc_embeds"], cfg, tp=tp, rules=rules,
+                     impl=impl, probe=probe)
+    elif cfg.family == "vlm":
+        ctx = batch["ctx_embeds"].astype(cfg.dtype)
+    cache_len = stack._cache_len_for(cfg, max_len)
+    x, caches, _ = _decoder_forward(
+        params, batch["tokens"], cfg, tp=tp, mode="prefill", ctx=ctx,
+        cache_len=cache_len, rules=rules, impl=impl, probe=probe,
+    )
+    logits = layers.logits_apply(params["embed"], x[:, -1:], cfg, impl=impl)
+    return _mask_pad_vocab(logits.astype(jnp.float32), cfg), caches
+
+
+def decode_step(
+    params, token: jax.Array, caches, pos, cfg, *, tp=1, rules=None, impl=None,
+    probe=False,
+):
+    """One decode step. token: [B,1] int32; pos: scalar or per-slot [B]
+    int32 (the position of this token; per-slot for continuous batching).
+    Cross-attention context is read from the caches."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (token.shape[0],))
+    x, new_caches, _ = _decoder_forward(
+        params, token, cfg, tp=tp, mode="decode", cache=caches, pos=pos,
+        rules=rules, impl=impl, probe=probe,
+    )
+    logits = layers.logits_apply(params["embed"], x, cfg, impl=impl)
+    return _mask_pad_vocab(logits.astype(jnp.float32), cfg), new_caches
+
+
+def init_cache(cfg, batch: int, max_len: int, *, tp=1):
+    """Abstract decode-cache structure (dry-run input specs / serving init)."""
+    cache_len = stack._cache_len_for(cfg, max_len)
+    ctx_len = cfg.encoder_tokens
+    d = {
+        "prefix": {
+            f"layer{i}": stack.slot_init_cache(cfg, kind, batch, cache_len, tp, ctx_len)
+            for i, kind in enumerate(cfg.prefix_layout())
+        },
+        "stack": stack.stack_init_cache(
+            cfg, cfg.superblock_layout(), cfg.n_superblocks, batch, max_len=cache_len,
+            tp=tp, ctx_len=ctx_len,
+        ),
+    }
+    return d

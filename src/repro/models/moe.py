@@ -1,0 +1,250 @@
+"""Mixture-of-Experts with sort-based (dropping, capacity-bounded) dispatch.
+
+Dispatch design (DESIGN.md §2, beyond-paper): the classic GShard einsum
+dispatch materializes a [tokens, experts, capacity] one-hot — ~0.7 TB per
+device for mixtral at train_4k scale.  Instead tokens are **sorted by
+assigned expert** and scattered into a dense [experts·capacity, d] buffer
+(MegaBlocks-style), so dispatch cost is O(S·k log(S·k)) sort + two
+gathers.  Under pjit the buffer's expert axis is sharded over the `model`
+mesh axis, and the data→expert resharding at the einsum boundary becomes
+the expert-parallel all-to-all.
+
+Routing: softmax over all experts → top-k → renormalize (Mixtral/DeepSeek
+convention), with the standard load-balancing auxiliary loss.  Tokens
+beyond an expert's capacity ``C = ceil(S·k/E · capacity_factor)`` are
+dropped (contribute zero) — GShard semantics, exact in the tests when
+capacity_factor is large.
+
+Expert sharding: experts divide the model axis when possible (jamba 16e,
+deepseek 64e over tp=16); otherwise (mixtral 8e < 16) experts replicate and
+the expert FFN hidden dim shards instead — rule ``shard_experts`` in
+sharding/partitioning.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, dense
+from repro.sharding.partitioning import ParamSpec
+
+
+def moe_specs(cfg) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    fin = 2 * f if cfg.act != "gelu" else f  # fused gate+up for swiglu
+    specs = {
+        "router": ParamSpec((d, e), jnp.float32, ("embed", "expert")),
+        "w_in": ParamSpec((e, d, fin), cfg.dtype, ("expert", "embed", "moe_mlp")),
+        "w_out": ParamSpec((e, f, d), cfg.dtype, ("expert", "moe_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        fsin = 2 * fs if cfg.act != "gelu" else fs
+        specs["shared_w_in"] = ParamSpec((d, fsin), cfg.dtype, ("embed", "mlp"))
+        specs["shared_w_out"] = ParamSpec((fs, d), cfg.dtype, ("mlp", "embed"))
+    return specs
+
+
+def _route(params, x, cfg):
+    """Top-k routing.  x: [B, S, D] → (idx [B,S,k], gate [B,S,k], aux)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_tok)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch/GShard form)
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )  # top-1 dispatch fraction
+    aux = e * jnp.sum(me * ce)
+    return idx, gate.astype(x.dtype), aux
+
+
+def _expert_ffn(params, h, cfg, impl=None):
+    """h: [E, C, D] → [E, C, D] through per-expert SwiGLU/GELU."""
+    w_in, w_out = params["w_in"], params["w_out"]
+
+    def one(hc, wi, wo):
+        z = dense(wi, hc, impl=impl)
+        if cfg.act == "gelu":
+            z = jax.nn.gelu(z)
+        else:
+            g, u = jnp.split(z, 2, axis=-1)
+            z = jax.nn.silu(g) * u
+        return dense(wo, z, impl=impl)
+
+    if isinstance(w_in, jnp.ndarray):
+        z = jnp.einsum("ecd,edf->ecf", h, w_in.astype(h.dtype))
+        if cfg.act == "gelu":
+            z = jax.nn.gelu(z)
+        else:
+            g, u = jnp.split(z, 2, axis=-1)
+            z = jax.nn.silu(g) * u
+        return jnp.einsum("ecf,efd->ecd", z, w_out.astype(h.dtype))
+    # quantized residency: vmap the quantized kernel over experts
+    return jax.vmap(one)(h, w_in, w_out)
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    capacity_factor: Optional[float] = None,
+    impl=None,
+):
+    """x: [B, S, D] → ([B, S, D], aux_loss). Sort-based capacity dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(1, int(s * k * cf / e + 0.999))
+
+    idx, gate, aux = _route(params, x, cfg)  # [B,S,k]
+
+    # flatten slots: each token appears k times
+    tok = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(-1)  # [S*k]
+    eid = idx.reshape(b, s * k)
+    gts = gate.reshape(b, s * k)
+
+    # sort slots by expert id (stable → FIFO within expert, GShard order)
+    order = jnp.argsort(eid, axis=1, stable=True)  # [B, S*k]
+    eid_s = jnp.take_along_axis(eid, order, axis=1)
+    tok_s = tok[order]  # token index per sorted slot
+    gts_s = jnp.take_along_axis(gts, order, axis=1)
+
+    # position within expert = rank - start_offset(expert)
+    counts = jax.vmap(lambda ee: jnp.bincount(ee, length=e))(eid_s)  # [B,E]
+    starts = jnp.cumsum(counts, axis=1) - counts  # [B,E]
+    rank = jnp.arange(s * k)[None, :]
+    pos = rank - jnp.take_along_axis(starts, eid_s, axis=1)  # [B,S*k]
+    keep = pos < cap
+    dest = jnp.where(keep, eid_s * cap + pos, e * cap)  # overflow slot dropped
+
+    # scatter tokens into [B, E*cap(+1), D]
+    xg = jnp.take_along_axis(
+        x, tok_s[..., None].astype(jnp.int32), axis=1
+    )  # [B, S*k, D] gathered token features
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    b_idx = jnp.arange(b)[:, None]
+    buf = buf.at[b_idx, dest].set(xg)  # duplicate tokens land in distinct slots
+    h = buf[:, : e * cap].reshape(b, e, cap, d)
+
+    # expert FFN (expert axis sharded → all-to-all at this boundary)
+    h = jnp.swapaxes(h, 0, 1).reshape(e, b * cap, d)
+    h = _expert_ffn(params, h, cfg, impl=impl)
+    h = jnp.swapaxes(h.reshape(e, b, cap, d), 0, 1).reshape(b, e * cap, d)
+
+    # gather back and combine with gates
+    h = jnp.pad(h, ((0, 0), (0, 1), (0, 0)))  # overflow slot reads zeros
+    out_slots = jnp.take_along_axis(h, dest[..., None].astype(jnp.int32), axis=1)
+    out_slots = out_slots * (gts_s * keep)[..., None].astype(out_slots.dtype)
+    y = jnp.zeros((b, s, d), x.dtype)
+    y = y.at[b_idx, tok_s].add(out_slots)
+
+    if cfg.n_shared_experts:
+        z = dense(params["shared_w_in"], x, impl=impl)
+        if cfg.act == "gelu":
+            z = jax.nn.gelu(z)
+        else:
+            g, u = jnp.split(z, 2, axis=-1)
+            z = jax.nn.silu(g) * u
+        y = y + dense(params["shared_w_out"], z, impl=impl)
+    return y, aux
+
+
+def moe_apply_einsum(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    capacity_factor: Optional[float] = None,
+    impl=None,
+):
+    """GShard-style einsum dispatch (§Perf P4 alternative).
+
+    The sort-based dispatch above is compute-optimal but its computed-index
+    scatter defeats the SPMD partitioner (EXPERIMENTS.md §Perf).  This
+    variant builds the classic dispatch/combine one-hots — O(S·E·C) memory,
+    but every op is an einsum the partitioner shards cleanly: the
+    data→expert resharding lowers to the canonical MoE all-to-all.
+    Numerically equivalent to ``moe_apply`` up to drop ordering (identical
+    when capacity is ample — tested).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(1, int(s * k * cf / e + 0.999))
+
+    idx, gate, aux = _route(params, x, cfg)  # [B,S,k]
+
+    # slot-sequential position assignment (GShard): iterate the k slots,
+    # accumulating per-expert fill so duplicates never collide.
+    fill = jnp.zeros((b, e), jnp.int32)
+    dispatch = jnp.zeros((b, s, e, cap), x.dtype)
+    combine = jnp.zeros((b, s, e, cap), x.dtype)
+    for slot in range(k):
+        eid = idx[..., slot]  # [B,S]
+        onehot_e = jax.nn.one_hot(eid, e, dtype=jnp.int32)  # [B,S,E]
+        # position of each token within its expert = prior fill + prefix
+        prefix = jnp.cumsum(onehot_e, axis=1) - onehot_e  # tokens before me
+        pos = jnp.take_along_axis(
+            prefix + fill[:, None, :], eid[..., None], axis=2
+        )[..., 0]  # [B,S]
+        fill = fill + jnp.sum(onehot_e, axis=1)
+        keep = pos < cap
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        onehot_c = jax.nn.one_hot(pos_c, cap, dtype=x.dtype) * keep[..., None]
+        d_slot = onehot_e.astype(x.dtype)[..., None] * onehot_c[:, :, None, :]
+        dispatch = dispatch + d_slot
+        combine = combine + d_slot * gate[..., slot][..., None, None]
+
+    h = jnp.einsum("bsec,bsd->ebcd", dispatch, x)  # expert-major (EP a2a)
+    h = h.reshape(e, b * cap, d)
+    h = _expert_ffn(params, h, cfg, impl=impl)
+    h = h.reshape(e, b, cap, d)
+    y = jnp.einsum("bsec,ebcd->bsd", combine, h)
+
+    if cfg.n_shared_experts:
+        z = dense(params["shared_w_in"], x, impl=impl)
+        if cfg.act == "gelu":
+            z = jax.nn.gelu(z)
+        else:
+            g, u = jnp.split(z, 2, axis=-1)
+            z = jax.nn.silu(g) * u
+        y = y + dense(params["shared_w_out"], z, impl=impl)
+    return y, aux
+
+
+def moe_ref(params, x, cfg):
+    """Dense O(T·E) reference: every expert on every token, gate-masked.
+
+    Ground truth for the dispatch tests (capacity_factor=∞ equivalence).
+    """
+    b, s, d = x.shape
+    idx, gate, aux = _route(params, x, cfg)
+    w_in, w_out = params["w_in"], params["w_out"]
+    z = jnp.einsum("bsd,edf->bsef", x, w_in.astype(x.dtype))
+    if cfg.act == "gelu":
+        z = jax.nn.gelu(z)
+    else:
+        g, u = jnp.split(z, 2, axis=-1)
+        z = jax.nn.silu(g) * u
+    all_out = jnp.einsum("bsef,efd->bsed", z, w_out.astype(x.dtype))
+    gates_full = jnp.zeros((b, s, cfg.n_experts), x.dtype)
+    b_i = jnp.arange(b)[:, None, None]
+    s_i = jnp.arange(s)[None, :, None]
+    gates_full = gates_full.at[b_i, s_i, idx].add(gate)
+    y = jnp.einsum("bsed,bse->bsd", all_out, gates_full)
+    if cfg.n_shared_experts:
+        zs = dense(params["shared_w_in"], x)
+        if cfg.act == "gelu":
+            zs = jax.nn.gelu(zs)
+        else:
+            g, u = jnp.split(zs, 2, axis=-1)
+            zs = jax.nn.silu(g) * u
+        y = y + dense(params["shared_w_out"], zs)
+    return y, aux

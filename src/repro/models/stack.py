@@ -1,0 +1,363 @@
+"""Layer stacks: periodic superblocks scanned with ``lax.scan``.
+
+Heterogeneous architectures (jamba's 1-attn-per-8-mamba interleave,
+llama-vision's every-5th-cross-attention, deepseek's dense-first-layer)
+are expressed as a **periodic superblock**: the per-superblock layout is a
+tuple of (mixer, ffn) slot kinds; parameters for each slot are stacked
+[n_superblocks, ...] and a single ``lax.scan`` runs the whole depth.  This
+keeps the lowered HLO size O(superblock) instead of O(depth) — the
+difference between a 30-second and a 30-minute XLA compile for the 72-layer
+398B config — and is what makes per-superblock remat natural.
+
+Aperiodic prefixes (deepseek first_k_dense) are unscanned leading layers.
+
+Three modes thread through every level:
+  * ``train``   — full sequence, no caches, returns (x, aux_loss)
+  * ``prefill`` — full sequence, builds decode caches
+  * ``decode``  — one token against caches at scalar position ``pos``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba, moe
+from repro.sharding.partitioning import ParamSpec, constrain, is_spec
+
+
+# ---------------------------------------------------------------------------
+# Single layer (slot)
+# ---------------------------------------------------------------------------
+
+
+def slot_specs(cfg, kind: tuple[str, str], tp: int) -> dict:
+    mixer, ffn = kind
+    d: dict = {"ln1": layers.norm_specs(cfg)}
+    if mixer == "attn":
+        d["mixer"] = (
+            attention.mla_specs(cfg, tp)
+            if cfg.attn_type == "mla"
+            else attention.gqa_specs(cfg, tp)
+        )
+    elif mixer == "mamba":
+        d["mixer"] = mamba.mamba_specs(cfg)
+    elif mixer == "cross":
+        d["mixer"] = attention.cross_specs(cfg, tp)
+    elif mixer == "attn_cross":
+        d["mixer"] = (
+            attention.mla_specs(cfg, tp)
+            if cfg.attn_type == "mla"
+            else attention.gqa_specs(cfg, tp)
+        )
+        d["ln_x"] = layers.norm_specs(cfg)
+        d["cross"] = attention.cross_specs(cfg, tp)
+    else:
+        raise ValueError(mixer)
+    if ffn == "dense":
+        d["ln2"] = layers.norm_specs(cfg)
+        d["ffn"] = layers.mlp_specs(cfg)
+    elif ffn == "moe":
+        d["ln2"] = layers.norm_specs(cfg)
+        d["ffn"] = moe.moe_specs(cfg)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return d
+
+
+def slot_init_cache(cfg, kind, batch, cache_len, tp, ctx_len=0):
+    """Decode-cache pytree for one slot (prefill materializes the real one;
+    this provides the abstract structure for dry-run input specs)."""
+    mixer, _ = kind
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            return attention.init_mla_cache(cfg, batch, cache_len)
+        return attention.init_kv_cache(cfg, batch, cache_len, tp=tp)
+    if mixer == "mamba":
+        return mamba.init_mamba_state(cfg, batch)
+    hp, kvp, _ = attention.attn_dims(cfg, tp)
+    cross = {
+        "ck": jnp.zeros((batch, ctx_len, kvp, cfg.d_head), cfg.dtype),
+        "cv": jnp.zeros((batch, ctx_len, kvp, cfg.d_head), cfg.dtype),
+    }
+    if mixer == "cross":
+        return cross
+    # attn_cross: self cache + cross kv
+    if cfg.attn_type == "mla":
+        self_c = attention.init_mla_cache(cfg, batch, cache_len)
+    else:
+        self_c = attention.init_kv_cache(cfg, batch, cache_len, tp=tp)
+    return {"self": self_c, "cross": cross}
+
+
+def _cache_len_for(cfg, max_len: int) -> int:
+    """SWA archs decode against a window-sized ring; others full length."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def slot_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    kind: tuple[str, str],
+    *,
+    tp: int,
+    mode: str,
+    cache=None,
+    pos=None,
+    ctx=None,
+    causal: bool = True,
+    cache_len: int = 0,
+    rules=None,
+    impl=None,
+    probe: bool = False,
+):
+    """One layer. Returns (x, new_cache, aux).
+
+    probe mode (dry-run cost counting): collapse inner lax.scans to a
+    single iteration so XLA cost analysis counts every flop exactly once.
+    """
+    big = x.shape[1] if x.ndim >= 2 else 1
+    ctx_big = ctx.shape[1] if (ctx is not None and hasattr(ctx, "shape")) else 0
+    attn_kw = (
+        dict(chunk_q=512, chunk_kv=max(big, ctx_big, 1024)) if probe else {}
+    )
+    # probe: unroll the mamba chunk loop so each chunk's ops are counted,
+    # capping at 8 unrolled chunks (compile-time bound).  The larger probe
+    # chunk adds log-depth levels to the associative scan: the elementwise
+    # scan subterm is overcounted by <= log2(c_probe)/log2(64) (<= 2x at
+    # 32k prefill) — an upper bound, bounded and documented in
+    # EXPERIMENTS.md §Dry-run; matmul flops are unaffected.
+    if probe:
+        mamba_kw = dict(chunk=max(64, -(-big // 8)), unroll_chunks=True)
+    else:
+        mamba_kw = dict(chunk=64)
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    h = layers.norm_apply(params["ln1"], x, cfg)
+    if mixer == "attn" or mixer == "attn_cross":
+        if cfg.attn_type == "mla":
+            if mode == "train":
+                a = attention.mla_apply(
+                    params["mixer"], h, cfg, tp=tp, impl=impl, **attn_kw
+                )
+            elif mode == "prefill":
+                a, self_c = attention.mla_apply(
+                    params["mixer"], h, cfg, tp=tp, cache_len=cache_len,
+                    impl=impl, **attn_kw,
+                )
+                new_cache = self_c
+            else:
+                self_c = cache["self"] if mixer == "attn_cross" else cache
+                a, self_c = attention.mla_decode(
+                    params["mixer"], h, self_c, cfg, tp=tp, pos=pos, impl=impl
+                )
+                new_cache = self_c
+        else:
+            if mode == "train":
+                a = attention.gqa_apply(params["mixer"], h, cfg, tp=tp, impl=impl, **attn_kw) \
+                    if causal else _bidir_attn(params["mixer"], h, cfg, tp, impl, **attn_kw)
+            elif mode == "prefill":
+                a, self_c = attention.gqa_prefill(
+                    params["mixer"], h, cfg, tp=tp, cache_len=cache_len, impl=impl,
+                    **attn_kw,
+                )
+                new_cache = self_c
+            else:
+                self_c = cache["self"] if mixer == "attn_cross" else cache
+                a, self_c = attention.gqa_decode(
+                    params["mixer"], h, self_c, cfg, tp=tp, pos=pos, impl=impl
+                )
+                new_cache = self_c
+    elif mixer == "mamba":
+        if mode == "train":
+            a = mamba.mamba_apply(params["mixer"], h, cfg, impl=impl, **mamba_kw)
+        elif mode == "prefill":
+            a, new_cache = mamba.mamba_apply(
+                params["mixer"], h, cfg, return_state=True, impl=impl,
+                **mamba_kw,
+            )
+        else:
+            a, new_cache = mamba.mamba_decode(params["mixer"], h, cache, cfg, impl=impl)
+    elif mixer == "cross":
+        if mode in ("train", "prefill"):
+            kv = attention.cross_kv(params["mixer"], ctx, cfg, tp=tp, impl=impl)
+            if mode == "prefill":
+                new_cache = kv
+        else:
+            kv = cache
+        a = attention.cross_apply(
+            params["mixer"], h, kv, cfg, tp=tp, gated=not cfg.is_enc_dec,
+            impl=impl, **attn_kw,
+        )
+    else:
+        raise ValueError(mixer)
+    x = x + a.astype(x.dtype)
+
+    if mixer == "attn_cross":
+        hx = layers.norm_apply(params["ln_x"], x, cfg)
+        if mode in ("train", "prefill"):
+            kv = attention.cross_kv(params["cross"], ctx, cfg, tp=tp, impl=impl)
+            if mode == "prefill":
+                new_cache = {"self": new_cache, "cross": kv}
+        else:
+            kv = cache["cross"]
+            new_cache = {"self": new_cache, "cross": kv}
+        cx = attention.cross_apply(
+            params["cross"], hx, kv, cfg, tp=tp, gated=not cfg.is_enc_dec,
+            impl=impl, **attn_kw,
+        )
+        x = x + cx.astype(x.dtype)
+
+    if ffn == "dense":
+        h2 = layers.norm_apply(params["ln2"], x, cfg)
+        x = x + layers.mlp_apply(params["ffn"], h2, cfg, impl=impl).astype(x.dtype)
+    elif ffn == "moe":
+        h2 = layers.norm_apply(params["ln2"], x, cfg)
+        moe_fn = (
+            moe.moe_apply_einsum if cfg.moe_impl == "einsum" else moe.moe_apply
+        )
+        y, aux = moe_fn(params["ffn"], h2, cfg, impl=impl)
+        x = x + y.astype(x.dtype)
+    return x, new_cache, aux
+
+
+def _bidir_attn(params, h, cfg, tp, impl, **attn_kw):
+    """Non-causal self-attention (encoder stacks)."""
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = attention._project_qkv(params, h, cfg, tp, positions, impl=impl)
+    out = attention.chunked_attention(
+        q, k, v, q_pos=positions, kv_pos=positions, causal=False, window=None,
+        **attn_kw,
+    )
+    return layers.dense(params["wo"], out.reshape(b, s, -1), impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Superblock and stack
+# ---------------------------------------------------------------------------
+
+
+def superblock_specs(cfg, layout, tp) -> dict:
+    return {f"slot{i}": slot_specs(cfg, kind, tp) for i, kind in enumerate(layout)}
+
+
+def superblock_apply(
+    params, x, cfg, layout, *, tp, mode, cache=None, pos=None, ctx=None,
+    causal=True, cache_len=0, rules=None, impl=None, probe=False,
+):
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(layout):
+        key = f"slot{i}"
+        x, nc, aux = slot_apply(
+            params[key], x, cfg, kind,
+            tp=tp, mode=mode,
+            cache=None if cache is None else cache.get(key),
+            pos=pos, ctx=ctx, causal=causal, cache_len=cache_len,
+            rules=rules, impl=impl, probe=probe,
+        )
+        new_cache[key] = {} if nc is None else nc
+        aux_total = aux_total + aux
+    return x, new_cache, aux_total
+
+
+def _stack_leaf(n: int, spec: ParamSpec) -> ParamSpec:
+    return ParamSpec(
+        shape=(n,) + spec.shape,
+        dtype=spec.dtype,
+        axes=("layers",) + spec.axes,
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def stack_specs(cfg, tp: int = 1, layout=None, n_blocks: Optional[int] = None) -> dict:
+    """Scanned-stack parameter tree: every leaf stacked [n_superblocks, ...]."""
+    layout = layout if layout is not None else cfg.superblock_layout()
+    n = n_blocks if n_blocks is not None else cfg.n_superblocks
+    sb = superblock_specs(cfg, layout, tp)
+    return jax.tree_util.tree_map(
+        lambda s: _stack_leaf(n, s), sb, is_leaf=is_spec
+    )
+
+
+def stack_init_cache(cfg, layout, n_blocks, batch, max_len, tp, ctx_len=0):
+    cache_len = _cache_len_for(cfg, max_len)
+    one = {
+        f"slot{i}": slot_init_cache(cfg, kind, batch, cache_len, tp, ctx_len)
+        for i, kind in enumerate(layout)
+    }
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape), one
+    )
+
+
+def stack_apply(
+    params, x, cfg, *, tp, mode, layout=None, cache=None, pos=None, ctx=None,
+    causal=True, cache_len=0, rules=None, impl=None, remat=False, probe=False,
+):
+    """Scan the superblock over stacked params (and caches).
+
+    Returns (x, new_cache_stacked_or_None, aux_sum).
+    """
+    layout = layout if layout is not None else cfg.superblock_layout()
+
+    if probe:
+        # Dry-run cost counting: unroll the superblock loop in Python so
+        # XLA cost analysis sees every superblock's ops (lax.scan bodies
+        # are otherwise counted once).  Used with depth-1/-2 probe configs
+        # by launch/dryrun.py, never on the training/serving hot path.
+        n = jax.tree_util.tree_leaves(params)[0].shape[0]
+        xx = x
+        caches_out, auxes = [], []
+        for i in range(n):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params)
+            c_i = (
+                None if cache is None
+                else jax.tree_util.tree_map(lambda a: a[i], cache)
+            )
+            xx, nc, aux = superblock_apply(
+                p_i, xx, cfg, layout, tp=tp, mode=mode, cache=c_i, pos=pos,
+                ctx=ctx, causal=causal, cache_len=cache_len, rules=rules,
+                impl=impl, probe=True,
+            )
+            caches_out.append(nc)
+            auxes.append(aux)
+        new_cache = None
+        if mode != "train":
+            new_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *caches_out
+            )
+        return xx, new_cache, sum(auxes)
+
+    def body(carry, per_block):
+        xx = carry
+        if mode == "train":
+            p = per_block
+            c = None
+        else:
+            p, c = per_block
+        y, nc, aux = superblock_apply(
+            p, xx, cfg, layout, tp=tp, mode=mode, cache=c, pos=pos,
+            ctx=ctx, causal=causal, cache_len=cache_len, rules=rules, impl=impl,
+            probe=probe,
+        )
+        if rules is not None:
+            y = constrain(y, ("batch", "seq", "act_embed"), rules)
+        return y, (nc, aux)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = params if mode == "train" else (params, cache)
+    x, (new_caches, auxes) = jax.lax.scan(body, x, xs)
+    return x, (None if mode == "train" else new_caches), jnp.sum(auxes)

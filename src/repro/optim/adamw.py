@@ -1,0 +1,181 @@
+"""AdamW with selectable moment precision (f32 / bf16 / int8-quantized).
+
+The paper's theme — shrink the resident bytes, keep compute in narrow
+integer formats — applied to optimizer state.  At 398B parameters the
+difference between f32 and bf16 moments is 3.2 TB of HBM across a pod
+(the difference between fitting and not fitting 256 chips); int8 chunked
+moments (block-wise scales, à la 8-bit Adam) halve it again and reuse
+:mod:`repro.core.quant`'s chunked quantizer.
+
+Moments are stored as ``Moment(payload, scale)`` pairs; for f32/bf16 the
+scale is a dummy scalar.  Functional API (optax-shaped, self-contained):
+
+    opt = adamw(lr_schedule, wd=0.1, moment_dtype="bf16")
+    state = opt.init(params)            # or opt.init_abstract(shape tree)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+_CHUNK = 256
+
+
+class Moment(NamedTuple):
+    payload: jax.Array
+    scale: jax.Array  # [chunks, 1] for int8; dummy scalar otherwise
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any  # tree of Moment
+    nu: Any  # tree of Moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    init_abstract: Callable
+
+
+def _is_moment(x):
+    return isinstance(x, Moment)
+
+
+def _encode(x: jax.Array, dtype: str) -> Moment:
+    if dtype == "f32":
+        return Moment(x.astype(jnp.float32), jnp.zeros((), jnp.float32))
+    if dtype == "bf16":
+        return Moment(x.astype(jnp.bfloat16), jnp.zeros((), jnp.float32))
+    if dtype == "int8":
+        q, s, _ = quant.quantize_chunked(x, chunk=_CHUNK)
+        return Moment(q, s)
+    raise ValueError(dtype)
+
+
+def _decode(m: Moment, dtype: str, shape) -> jax.Array:
+    if dtype in ("f32", "bf16"):
+        return m.payload.astype(jnp.float32)
+    n = 1
+    for d in shape:
+        n *= d
+    return quant.dequantize_chunked(m.payload, m.scale, n, shape)
+
+
+def _abstract_moment(shape, dtype: str):
+    if dtype == "int8":
+        n = 1
+        for d in shape:
+            n *= d
+        chunks = -(-n // _CHUNK)
+        return Moment(
+            jax.ShapeDtypeStruct((chunks, _CHUNK), jnp.int8),
+            jax.ShapeDtypeStruct((chunks, 1), jnp.float32),
+        )
+    dt = jnp.float32 if dtype == "f32" else jnp.bfloat16
+    return Moment(
+        jax.ShapeDtypeStruct(shape, dt), jax.ShapeDtypeStruct((), jnp.float32)
+    )
+
+
+def cosine_schedule(
+    peak_lr: float, warmup: int = 1000, total: int = 100_000, floor: float = 0.1
+) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        decay = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak_lr * jnp.where(step < warmup, warm, decay)
+
+    return fn
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree)
+        )
+    )
+
+
+def adamw(
+    lr: Union[float, Schedule],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    wd: float = 0.1,
+    moment_dtype: str = "f32",
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn: Schedule = lr if callable(lr) else (lambda s: jnp.asarray(lr))
+
+    def init(params):
+        def zeros():
+            # distinct buffers for mu and nu — donation requires no aliasing
+            return jax.tree_util.tree_map(
+                lambda p: _encode(jnp.zeros(p.shape, jnp.float32), moment_dtype),
+                params,
+            )
+
+        return AdamState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def init_abstract(param_shapes):
+        mom = jax.tree_util.tree_map(
+            lambda p: _abstract_moment(p.shape, moment_dtype), param_shapes
+        )
+        return AdamState(jax.ShapeDtypeStruct((), jnp.int32), mom, mom)
+
+    def update(grads, state: AdamState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        if clip_norm is not None:
+            gn = global_norm(grads)
+            gscale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+        else:
+            gscale = 1.0
+
+        def one(g, p, m: Moment, v: Moment):
+            g32 = g.astype(jnp.float32) * gscale
+            m32 = _decode(m, moment_dtype, g32.shape)
+            v32 = _decode(v, moment_dtype, g32.shape)
+            m32 = b1 * m32 + (1 - b1) * g32
+            v32 = b2 * v32 + (1 - b2) * jnp.square(g32)
+            upd = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + eps)
+            upd = upd + wd * p.astype(jnp.float32)
+            return (-lr_t * upd).astype(p.dtype), _encode(m32, moment_dtype), _encode(
+                v32, moment_dtype
+            )
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_m = jax.tree_util.tree_leaves(state.mu, is_leaf=_is_moment)
+        flat_v = jax.tree_util.tree_leaves(state.nu, is_leaf=_is_moment)
+        outs = [one(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+        unf = lambda i: jax.tree_util.tree_unflatten(tdef, [o[i] for o in outs])
+        return unf(0), AdamState(step, unf(1), unf(2))
+
+    return Optimizer(init=init, update=update, init_abstract=init_abstract)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates,
+    )

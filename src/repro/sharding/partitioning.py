@@ -1,0 +1,257 @@
+"""Logical-axis partitioning: parameter specs, sharding rules, padding.
+
+The models in :mod:`repro.models` never name mesh axes directly.  Every
+parameter is declared as a :class:`ParamSpec` carrying *logical* axis names
+(``"embed"``, ``"heads"``, ``"mlp"``, ``"vocab"``, ``"expert"``, …); a rule
+table maps logical names to mesh axes per parallelism strategy (TP, TP+FSDP).
+This is the same discipline as T5X/MaxText partitioning and is what lets the
+dry-run lower the full 398B configs without materializing a single weight:
+``abstract(spec_tree)`` yields ShapeDtypeStructs and
+``pspecs(spec_tree, rules)`` yields the matching PartitionSpecs.
+
+Padding-to-shardable: several assigned architectures have dims that do not
+divide the 16-way model axis (qwen1.5's 40 heads, minicpm3's 73448 vocab,
+seamless' 256206 vocab).  ``pad_dim`` computes the padded size; models pad
+weights with zeros (exact: zero rows/cols contribute nothing — padded
+attention heads produce zero output through zeroed o-proj rows, padded
+vocab rows are masked at the loss/sample boundary).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axes = tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + dtype + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Axes = ()
+    init: Union[str, Callable] = "normal"
+    scale: float = 1.0  # stddev multiplier for 'normal'
+    valid_dim0: Optional[int] = None  # zero rows >= this (head/vocab padding)
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(spec_tree) -> Any:
+    """ParamSpec tree → ShapeDtypeStruct tree (no allocation — dry-run path)."""
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree)
+
+
+def axes_tree(spec_tree) -> Any:
+    return _tree_map(lambda s: s.axes, spec_tree)
+
+
+_INITIALIZERS: dict[str, Callable] = {}
+
+
+def _register(name):
+    def deco(fn):
+        _INITIALIZERS[name] = fn
+        return fn
+
+    return deco
+
+
+@_register("normal")
+def _init_normal(key, spec: ParamSpec):
+    # stacked (scan) leaves: fan-in is the per-layer leading dim
+    stacked = spec.axes and spec.axes[0] == "layers" and len(spec.shape) > 1
+    fan_in = spec.shape[1] if stacked else (spec.shape[0] if spec.shape else 1)
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    w = jax.random.normal(key, spec.shape, jnp.float32) * std
+    if spec.valid_dim0 is not None:
+        row_axis = 1 if stacked else 0
+        iota = jax.lax.broadcasted_iota(jnp.int32, spec.shape, row_axis)
+        w = jnp.where(iota < spec.valid_dim0, w, 0.0)
+    return w.astype(spec.dtype)
+
+
+@_register("embedding")
+def _init_embedding(key, spec: ParamSpec):
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(
+        spec.dtype
+    )
+
+
+@_register("zeros")
+def _init_zeros(key, spec: ParamSpec):
+    del key
+    return jnp.zeros(spec.shape, spec.dtype)
+
+
+@_register("ones")
+def _init_ones(key, spec: ParamSpec):
+    del key
+    return jnp.ones(spec.shape, spec.dtype)
+
+
+@_register("ssm_dt")
+def _init_ssm_dt(key, spec: ParamSpec):
+    """Mamba dt bias: softplus-inverse of uniform [1e-3, 1e-1]."""
+    u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+    return jnp.log(jnp.expm1(u)).astype(spec.dtype)
+
+
+@_register("ssm_a")
+def _init_ssm_a(key, spec: ParamSpec):
+    """Mamba A_log: log(1..d_state) broadcast over channels."""
+    del key
+    n = spec.shape[-1]
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), spec.shape[:-1] + (1,))
+    return jnp.log(a).astype(spec.dtype)
+
+
+def materialize(spec_tree, key: jax.Array):
+    """Instantiate real parameters from a ParamSpec tree (tests/examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        fn = s.init if callable(s.init) else _INITIALIZERS[s.init]
+        out.append(fn(k, s))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+def base_rules(
+    *,
+    fsdp: bool = False,
+    data_axes: tuple[str, ...] = ("pod", "data"),
+    model_axis: str = "model",
+    shard_kv_heads: bool = True,
+    shard_experts: bool = True,
+    seq_axis: Optional[str] = None,
+) -> dict[str, MeshAxes]:
+    """Logical-name → mesh-axes rule table.
+
+    fsdp=True additionally shards the large replicated weight axes over the
+    ``data`` axis (ZeRO-3 style; XLA inserts the all-gathers), which is what
+    lets jamba-398B training fit a 256-chip pod.
+    """
+    fsdp_axis = "data" if fsdp else None
+    return {
+        # activations
+        "batch": data_axes,
+        "seq": seq_axis,  # context parallelism when set
+        "kv_seq": seq_axis,
+        "act_embed": None,
+        "act_heads": model_axis,
+        "act_mlp": model_axis,
+        "act_vocab": model_axis,
+        # parameters
+        "embed": fsdp_axis,  # contraction dim of most projections
+        "heads": model_axis,
+        "kv_heads": model_axis if shard_kv_heads else None,
+        "head_dim": None,
+        "mlp": model_axis,
+        "moe_mlp": model_axis if not shard_experts else None,
+        "vocab": model_axis,
+        "expert": model_axis if shard_experts else None,
+        "kv_lora": None,
+        "layers": None,  # scan axis — never sharded
+        "conv": None,
+        "ssm_state": None,
+        "dt_rank": None,
+        "norm": None,
+    }
+
+
+def spec_for(axes: Axes, rules: Mapping[str, MeshAxes]) -> PartitionSpec:
+    """Logical axes tuple → PartitionSpec, dropping duplicate mesh axes.
+
+    A mesh axis may appear at most once in a PartitionSpec; when two logical
+    axes map to the same mesh axis (e.g. fsdp 'embed'→data while 'batch'
+    already uses data in an activation), the later occurrence is dropped
+    (replicated) — matching t5x semantics.
+    """
+    used: set[str] = set()
+    entries: list[MeshAxes] = []
+    for name in axes:
+        if name is None:
+            entries.append(None)
+            continue
+        if name not in rules:
+            raise KeyError(f"no sharding rule for logical axis {name!r}")
+        target = rules[name]
+        if target is None:
+            entries.append(None)
+            continue
+        tgt = (target,) if isinstance(target, str) else tuple(target)
+        tgt = tuple(t for t in tgt if t not in used)
+        used.update(tgt)
+        if not tgt:
+            entries.append(None)
+        elif len(tgt) == 1:
+            entries.append(tgt[0])
+        else:
+            entries.append(tgt)
+    return PartitionSpec(*entries)
+
+
+def pspecs(spec_tree, rules: Mapping[str, MeshAxes]):
+    """ParamSpec tree → PartitionSpec tree under the given rules."""
+    return _tree_map(lambda s: spec_for(s.axes, rules), spec_tree)
+
+
+def shardings(spec_tree, mesh: Mesh, rules: Mapping[str, MeshAxes]):
+    return _tree_map(lambda s: NamedSharding(mesh, spec_for(s.axes, rules)), spec_tree)
+
+
+def constrain(x: jax.Array, axes: Axes, rules: Mapping[str, MeshAxes]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside a mesh ctx)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec_for(axes, rules))
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope (single-device tests)
+
+
+# ---------------------------------------------------------------------------
+# Pad-to-shardable
+# ---------------------------------------------------------------------------
+
+
+def pad_dim(n: int, multiple: int) -> int:
+    """Smallest padded size ≥ n divisible by ``multiple``."""
+    return -(-n // multiple) * multiple
+
+
+def maybe_pad_heads(n_heads: int, tp: int) -> int:
+    return pad_dim(n_heads, tp) if n_heads % tp else n_heads
+
+
+def shard_info(mesh_shape: Mapping[str, int]) -> dict[str, int]:
+    """Convenience: sizes of the canonical axes (absent axes = 1)."""
+    return {
+        "pod": mesh_shape.get("pod", 1),
+        "data": mesh_shape.get("data", 1),
+        "model": mesh_shape.get("model", 1),
+    }

@@ -1,0 +1,13 @@
+"""Test harness config.
+
+Multi-device tests (tests/test_distributed.py, test_dryrun_small.py) need
+several host devices; smoke tests and kernel benches should see a normal
+CPU.  8 forced host devices keeps both workable: smoke tests run
+single-device semantics on device 0 while mesh tests build (2,2,2) or
+(4,2) meshes.  The PRODUCTION 512-device setting lives only in
+launch/dryrun.py per the dry-run spec — never set globally here.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,129 @@
+"""Property + unit tests for the BSDP bit-plane pipeline (paper §IV)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitplane, bsdp
+from repro.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestBitplaneLayout:
+    def test_encode_shape_dtype(self):
+        x = jnp.zeros((3, 128), jnp.int8)
+        p = bitplane.encode(x)
+        assert p.shape == (3, 4, 4) and p.dtype == jnp.uint32
+
+    def test_roundtrip_signed_exhaustive(self):
+        # every int4 value in every word position
+        vals = jnp.tile(jnp.arange(-8, 8, dtype=jnp.int8), 4)[None, :]  # [1, 64]
+        assert bool(jnp.all(bitplane.decode(bitplane.encode(vals)) == vals))
+
+    def test_roundtrip_unsigned_exhaustive(self):
+        vals = jnp.tile(jnp.arange(0, 16, dtype=jnp.int8), 4)[None, :]
+        p = bitplane.encode(vals)
+        assert bool(jnp.all(bitplane.decode(p, signed=False) == vals))
+
+    def test_weights_layout(self):
+        rng = np.random.default_rng(0)
+        w = jnp.array(rng.integers(-8, 8, size=(64, 5)).astype(np.int8))
+        wp = bitplane.encode_weights(w)
+        assert wp.shape == (5, 4, 2)
+        assert bool(jnp.all(ref.decode_weights_ref(wp) == w))
+
+    def test_non_multiple_rejected(self):
+        with pytest.raises(ValueError):
+            bitplane.encode(jnp.zeros((1, 33), jnp.int8))
+
+    def test_pad_to_word(self):
+        x = jnp.ones((2, 33), jnp.int8)
+        p = bitplane.pad_to_word(x)
+        assert p.shape == (2, 64)
+        assert bool(jnp.all(p[:, 33:] == 0))
+
+
+class TestPlaneSignLemma:
+    """The paper's §IV-B rule: negate iff exactly one of j,k == 3."""
+
+    def test_sign_matrix(self):
+        s = bsdp.SIGN_SIGNED
+        for j in range(4):
+            for k in range(4):
+                expected = -1 if (j == 3) != (k == 3) else 1
+                assert s[j][k] == expected
+
+    def test_two_scalar_products_exhaustive(self):
+        """BSDP of single elements == plain product, for ALL int4 pairs."""
+        a_vals = jnp.repeat(jnp.arange(-8, 8, dtype=jnp.int8), 16)[None, :]  # 256
+        b_vals = jnp.tile(jnp.arange(-8, 8, dtype=jnp.int8), 16)[None, :]
+        # one element per 32-word: place each pair in its own padded row
+        a = a_vals.reshape(256, 1)
+        b = b_vals.reshape(256, 1)
+        ap = bitplane.encode(bitplane.pad_to_word(a))
+        bp = bitplane.encode(bitplane.pad_to_word(b))
+        prod = bsdp.bsdp_popcount(ap, bp, signed=True)
+        expected = a.astype(jnp.int32)[:, 0] * b.astype(jnp.int32)[:, 0]
+        assert bool(jnp.all(prod == expected))
+
+    def test_unsigned_exhaustive(self):
+        a = jnp.repeat(jnp.arange(0, 16, dtype=jnp.int8), 16).reshape(256, 1)
+        b = jnp.tile(jnp.arange(0, 16, dtype=jnp.int8), 16).reshape(256, 1)
+        ap = bitplane.encode(bitplane.pad_to_word(a))
+        bp = bitplane.encode(bitplane.pad_to_word(b))
+        prod = bsdp.bsdp_popcount(ap, bp, signed=False)
+        expected = a.astype(jnp.int32)[:, 0] * b.astype(jnp.int32)[:, 0]
+        assert bool(jnp.all(prod == expected))
+
+
+class TestBsdpForms:
+    @pytest.mark.parametrize("form", ["popcount", "matmul"])
+    @pytest.mark.parametrize("m,k,n", [(1, 32, 1), (4, 64, 8), (7, 320, 33)])
+    def test_exact_vs_int_matmul(self, form, m, k, n):
+        rng = np.random.default_rng(m * k * n)
+        a = jnp.array(rng.integers(-8, 8, size=(m, k)).astype(np.int8))
+        w = jnp.array(rng.integers(-8, 8, size=(k, n)).astype(np.int8))
+        wp = bitplane.encode_weights(w)
+        out = bsdp.bsdp_gemv(wp, a, signed=True, form=form)
+        assert bool(jnp.all(out == ref.bsdp_ref(a, w)))
+
+    def test_planes_ref_agrees(self):
+        rng = np.random.default_rng(9)
+        a = jnp.array(rng.integers(-8, 8, size=(3, 96)).astype(np.int8))
+        w = jnp.array(rng.integers(-8, 8, size=(96, 5)).astype(np.int8))
+        ap, wp = bitplane.encode(a), bitplane.encode_weights(w)
+        assert bool(jnp.all(ref.bsdp_planes_ref(ap, wp) == ref.bsdp_ref(a, w)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=0, max_value=2**31),
+    st.booleans(),
+)
+def test_property_bsdp_equals_int_matmul(m, kw, n, seed, signed):
+    """For ANY int4 matrices, the full bit-plane pipeline is exact."""
+    k = kw * 32
+    rng = np.random.default_rng(seed)
+    lo, hi = (-8, 8) if signed else (0, 16)
+    a = jnp.array(rng.integers(lo, hi, size=(m, k)).astype(np.int8))
+    w = jnp.array(rng.integers(lo, hi, size=(k, n)).astype(np.int8))
+    wp = bitplane.encode_weights(w)
+    expected = ref.bsdp_ref(a, w)
+    for form in ("popcount", "matmul"):
+        out = bsdp.bsdp_gemv(wp, a, signed=signed, form=form)
+        assert bool(jnp.all(out == expected)), form
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=8), st.integers(min_value=0, max_value=2**31))
+def test_property_bitplane_roundtrip(rows, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.integers(-8, 8, size=(rows, 32)).astype(np.int8))
+    assert bool(jnp.all(bitplane.decode(bitplane.encode(x)) == x))

@@ -1,0 +1,120 @@
+"""Optimizer + checkpoint tests: moment precisions, restore, reshard, CRC."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.optim import adamw
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quad_problem():
+    """min ||p - t||² — AdamW must converge near t (modulo decay)."""
+    target = {"a": jnp.array([1.0, -2.0, 3.0]), "b": {"c": jnp.full((4, 4), 0.5)}}
+
+    def loss(p):
+        return sum(
+            jnp.sum(jnp.square(x - t))
+            for x, t in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(target))
+        )
+
+    params = jax.tree_util.tree_map(jnp.zeros_like, target)
+    return loss, params, target
+
+
+class TestAdamW:
+    @pytest.mark.parametrize("moment_dtype", ["f32", "bf16", "int8"])
+    def test_converges(self, moment_dtype):
+        loss, params, target = _quad_problem()
+        opt = adamw.adamw(0.05, wd=0.0, moment_dtype=moment_dtype)
+        state = opt.init(params)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            upd, state = opt.update(g, state, params)
+            params = adamw.apply_updates(params, upd)
+        assert float(loss(params)) < 1e-2, moment_dtype
+
+    def test_int8_moments_memory(self):
+        """int8 moments store 1 byte + scale overhead per element."""
+        params = {"w": jnp.zeros((1024, 256))}
+        opt = adamw.adamw(1e-3, moment_dtype="int8")
+        state = opt.init(params)
+        m = jax.tree_util.tree_leaves(state.mu, is_leaf=lambda x: isinstance(x, adamw.Moment))[0]
+        assert m.payload.dtype == jnp.int8
+        payload_bytes = m.payload.size + m.scale.size * 4
+        f32_bytes = 1024 * 256 * 4
+        assert payload_bytes < f32_bytes / 3.5
+
+    def test_clipping_bounds_update(self):
+        params = {"w": jnp.zeros(8)}
+        opt = adamw.adamw(1.0, wd=0.0, clip_norm=1.0)
+        state = opt.init(params)
+        g = {"w": jnp.full(8, 1e6)}
+        upd, _ = opt.update(g, state, params)
+        assert float(jnp.max(jnp.abs(upd["w"]))) < 1.1
+
+    def test_abstract_matches_real(self):
+        params = {"w": jnp.zeros((33, 7)), "b": jnp.zeros(5)}
+        for md in ("f32", "bf16", "int8"):
+            opt = adamw.adamw(1e-3, moment_dtype=md)
+            real = opt.init(params)
+            abst = opt.init_abstract(
+                jax.tree_util.tree_map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+            )
+            rl = jax.tree_util.tree_leaves(real)
+            al = jax.tree_util.tree_leaves(abst)
+            for r, a in zip(rl, al):
+                assert r.shape == a.shape and r.dtype == a.dtype, md
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"p": {"w": jnp.arange(12.0).reshape(3, 4)}, "s": jnp.int32(7)}
+        ckpt.save(tree, str(tmp_path), 5, extra={"note": "x"})
+        back, extra = ckpt.restore(str(tmp_path))
+        assert extra["note"] == "x"
+        np.testing.assert_array_equal(np.array(back["p"]["w"]), np.array(tree["p"]["w"]))
+        assert int(back["s"]) == 7
+
+    def test_latest_step(self, tmp_path):
+        tree = {"x": jnp.zeros(2)}
+        for s in (1, 7, 3):
+            ckpt.save(tree, str(tmp_path), s)
+        assert ckpt.latest_step(str(tmp_path)) == 7
+
+    def test_crc_detects_corruption(self, tmp_path):
+        tree = {"x": jnp.arange(100.0)}
+        path = ckpt.save(tree, str(tmp_path), 1)
+        leaf = os.path.join(path, "leaf_00000.npy")
+        a = np.load(leaf)
+        a[0] = 999.0
+        np.save(leaf, a)
+        with pytest.raises(IOError, match="CRC"):
+            ckpt.restore(str(tmp_path), 1)
+
+    def test_async_save(self, tmp_path):
+        tree = {"x": jnp.ones((64, 64))}
+        ac = ckpt.AsyncCheckpointer()
+        ac.save(tree, str(tmp_path), 2)
+        ac.wait()
+        back, _ = ckpt.restore(str(tmp_path), 2)
+        np.testing.assert_array_equal(np.array(back["x"]), np.ones((64, 64)))
+
+    def test_reshard_on_load(self, tmp_path):
+        """Elastic path: save unsharded, restore onto a 4-device mesh."""
+        import jax.sharding as jsh
+
+        if jax.device_count() < 4:
+            pytest.skip("needs >=4 devices (run under forced host devices)")
+        tree = {"w": jnp.arange(32.0).reshape(8, 4)}
+        ckpt.save(tree, str(tmp_path), 1)
+        mesh = jax.make_mesh((4,), ("data",))
+        sp = {"w": jsh.PartitionSpec("data", None)}
+        back, _ = ckpt.restore(str(tmp_path), 1, mesh=mesh, pspecs=sp)
+        assert back["w"].sharding.spec == sp["w"]
+        np.testing.assert_array_equal(np.array(back["w"]), np.array(tree["w"]))

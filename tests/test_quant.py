@@ -1,0 +1,133 @@
+"""Unit + property tests for repro.core.quant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestQuantize:
+    def test_roundtrip_error_bound_int8(self):
+        rng = np.random.default_rng(0)
+        x = jnp.array(rng.normal(size=(8, 256)).astype(np.float32))
+        qt = quant.quantize_acts(x, bits=8)
+        err = jnp.abs(x - qt.dequantize())
+        # |x - dq(q(x))| <= scale/2 element-wise (round-to-nearest)
+        assert bool(jnp.all(err <= qt.scale / 2 + 1e-7))
+
+    def test_roundtrip_error_bound_int4(self):
+        rng = np.random.default_rng(1)
+        x = jnp.array(rng.normal(size=(4, 64)).astype(np.float32))
+        qt = quant.quantize_acts(x, bits=4)
+        err = jnp.abs(x - qt.dequantize())
+        assert bool(jnp.all(err <= qt.scale / 2 + 1e-7))
+
+    def test_range_clamped(self):
+        x = jnp.array([[1e6, -1e6, 0.0, 1.0]])
+        for bits, (lo, hi) in quant.INT_RANGE.items():
+            qt = quant.quantize_acts(x, bits=bits)
+            assert int(qt.data.min()) >= lo and int(qt.data.max()) <= hi
+
+    def test_per_channel_axis(self):
+        rng = np.random.default_rng(2)
+        w = jnp.array(rng.normal(size=(128, 16)).astype(np.float32))
+        qt = quant.quantize_weights(w)
+        assert qt.scale.shape == (1, 16)
+        # each channel's max-abs maps to 127
+        assert int(jnp.abs(qt.data).max()) == 127
+
+    def test_zero_input(self):
+        qt = quant.quantize_acts(jnp.zeros((2, 32)))
+        assert bool(jnp.all(qt.data == 0))
+        assert bool(jnp.all(jnp.isfinite(qt.scale)))
+
+    def test_quant_tensor_is_pytree(self):
+        qt = quant.quantize_acts(jnp.ones((2, 32)))
+        leaves = jax.tree_util.tree_leaves(qt)
+        assert len(leaves) == 2  # data + scale
+        qt2 = jax.tree_util.tree_map(lambda x: x, qt)
+        assert qt2.bits == qt.bits and qt2.layout == qt.layout
+
+
+class TestPackInt4:
+    def test_roundtrip_exhaustive(self):
+        # all 256 nibble pairs
+        vals = jnp.array(
+            [[a, b] for a in range(-8, 8) for b in range(-8, 8)], dtype=jnp.int8
+        ).reshape(-1)  # [512]
+        q = vals.reshape(-1, 1)
+        p = quant.pack_int4(q, axis=0)
+        assert p.shape == (256, 1)
+        assert bool(jnp.all(quant.unpack_int4(p, axis=0) == q))
+
+    def test_roundtrip_axis1(self):
+        rng = np.random.default_rng(3)
+        q = jnp.array(rng.integers(-8, 8, size=(5, 64)).astype(np.int8))
+        p = quant.pack_int4(q, axis=1)
+        assert p.shape == (5, 32)
+        assert bool(jnp.all(quant.unpack_int4(p, axis=1) == q))
+
+    def test_odd_axis_rejected(self):
+        with pytest.raises(ValueError):
+            quant.pack_int4(jnp.zeros((3, 4), jnp.int8), axis=0)
+
+
+class TestChunked:
+    def test_roundtrip_shape(self):
+        rng = np.random.default_rng(4)
+        x = jnp.array(rng.normal(size=(7, 33)).astype(np.float32))
+        q, s, n = quant.quantize_chunked(x, chunk=16)
+        back = quant.dequantize_chunked(q, s, n, x.shape)
+        assert back.shape == x.shape
+        # error bounded by per-chunk scale/2
+        err = np.abs(np.array(x) - np.array(back))
+        assert err.max() <= float(s.max()) / 2 + 1e-7
+
+    def test_stochastic_unbiased_mean(self):
+        x = jnp.full((1, 4096), 0.3)  # sits between grid points
+        keys = jax.random.split(jax.random.PRNGKey(0), 8)
+        outs = []
+        for k in keys:
+            qt = quant.quantize_stochastic(x, k, bits=8)
+            outs.append(np.array(qt.data, np.float32) * np.array(qt.scale))
+        mean = np.mean(outs)
+        assert abs(mean - 0.3) < 2e-3  # unbiased to sampling noise
+
+
+class TestFakeQuant:
+    def test_straight_through_grad(self):
+        x = jnp.array([[0.5, -0.25, 0.125, 1.0]])
+        g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v, 8, -1)))(x)
+        np.testing.assert_allclose(np.array(g), np.ones_like(g))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-100, max_value=100, allow_nan=False, width=32),
+        min_size=4,
+        max_size=64,
+    ),
+    st.sampled_from([8, 4]),
+)
+def test_property_quant_error_bound(vals, bits):
+    """Round-to-nearest error never exceeds scale/2 (core invariant)."""
+    x = jnp.array(np.array(vals, np.float32)[None, :])
+    qt = quant.quantize_acts(x, bits=bits)
+    err = np.abs(np.array(x) - np.array(qt.dequantize()))
+    assert (err <= float(qt.scale.max()) / 2 + 1e-5).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=16), st.integers(min_value=0, max_value=2**32 - 1))
+def test_property_pack_unpack_int4(pairs, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.array(rng.integers(-8, 8, size=(2 * pairs,)).astype(np.int8)).reshape(-1, 1)
+    p = quant.pack_int4(q, axis=0)
+    assert bool(jnp.all(quant.unpack_int4(p, axis=0) == q))
