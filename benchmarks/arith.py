@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, time_fn
 from repro.core import dim as dim_lib
 from repro.kernels import ops
@@ -31,11 +32,12 @@ M, K, N = 64, 2048, 512
 
 
 def run() -> list[str]:
+    m, k, n = (16, 512, 256) if common.SMOKE else (M, K, N)
     rng = np.random.default_rng(0)
-    x8 = jnp.array(rng.integers(-128, 128, (M, K)).astype(np.int8))
-    w8 = jnp.array(rng.integers(-128, 128, (K, N)).astype(np.int8))
-    w16 = jnp.array(rng.integers(-32768, 32768, (K, N)).astype(np.int16))
-    macs = M * K * N
+    x8 = jnp.array(rng.integers(-128, 128, (m, k)).astype(np.int8))
+    w8 = jnp.array(rng.integers(-128, 128, (k, n)).astype(np.int8))
+    w16 = jnp.array(rng.integers(-32768, 32768, (k, n)).astype(np.int16))
+    macs = m * k * n
 
     rows = []
 

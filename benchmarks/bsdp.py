@@ -11,6 +11,11 @@ Ladder (mirrors the paper's):
 All five produce bit-identical int32 results (asserted).  CPU wall times
 give the trend; the decode-cell dry-runs carry the TPU memory-term story
 (§Roofline: w4 residency quarters the dominant term).
+
+The batch sweep (M ∈ {1, 8, 32, 128}) measures the GEMV→GEMM crossover:
+the popcount kernel's VPU cost grows linearly in M while the plane-pair
+GEMM kernel amortizes the weight-plane unpack over the whole batch — the
+serving argument for bit-plane residency at batch > 1.
 """
 
 from __future__ import annotations
@@ -19,18 +24,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, time_fn
 from repro.core import bitplane, bsdp, quant
 from repro.kernels import ops, ref
 
 M, K, N = 8, 4096, 1024
+BATCH_SWEEP = (1, 8, 32, 128)
+
+
+def _sizes():
+    if common.SMOKE:
+        return 4, 512, 256, (1, 8)
+    return M, K, N, BATCH_SWEEP
 
 
 def run() -> list[str]:
+    m_lad, k, n, sweep = _sizes()
     rng = np.random.default_rng(0)
-    a4 = jnp.array(rng.integers(-8, 8, (M, K)).astype(np.int8))
-    w4 = jnp.array(rng.integers(-8, 8, (K, N)).astype(np.int8))
-    macs = M * K * N
+    a4 = jnp.array(rng.integers(-8, 8, (m_lad, k)).astype(np.int8))
+    w4 = jnp.array(rng.integers(-8, 8, (k, n)).astype(np.int8))
+    macs = m_lad * k * n
     expected = np.array(ref.bsdp_ref(a4, w4))
 
     rows = []
@@ -54,8 +68,8 @@ def run() -> list[str]:
     rows.append(row("bsdp/native_optimized_int8", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
 
     wp = quant.pack_int4(w4, axis=0)
-    ones_m = jnp.ones((M, 1), jnp.float32)
-    ones_n = jnp.ones((1, N), jnp.float32)
+    ones_m = jnp.ones((m_lad, 1), jnp.float32)
+    ones_n = jnp.ones((1, n), jnp.float32)
     xq = quant.QuantTensor(data=a4, scale=ones_m, bits=8, axis=-1)
     t = time_fn(lambda: ops.quant_matmul_int4(xq, wp, ones_n))
     rows.append(row("bsdp/packed_int4_kernel", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
@@ -72,8 +86,35 @@ def run() -> list[str]:
     assert (np.array(mxu(a4)) == expected).all()
     rows.append(row("bsdp/bsdp_mxu_planes", t, f"MOPS={macs/t/1e6:.0f};speedup={base/t:.2f}"))
 
+    # ------------------------------------------------------------------
+    # batch sweep: GEMV→GEMM crossover (Pallas kernels, interpret on CPU)
+    # ------------------------------------------------------------------
+    ks, ns = min(k, 2048), min(n, 512)  # keep interpret-mode sweep tractable
+    ws = jnp.array(rng.integers(-8, 8, (ks, ns)).astype(np.int8))
+    planes_s = bitplane.encode_weights(ws)
+    for m in sweep:
+        am = jnp.array(rng.integers(-8, 8, (m, ks)).astype(np.int8))
+        expected_m = np.array(ref.bsdp_ref(am, ws))
+        sweep_macs = m * ks * ns
+        times = {}
+        for kern in ("gemv", "gemm"):
+            fn = lambda a, _kern=kern: ops.bsdp_matmul(a, planes_s, kernel=_kern)
+            assert (np.array(fn(am)) == expected_m).all(), (m, kern)
+            times[kern] = time_fn(fn, am, repeats=3, warmup=1)
+        pick = ops.bsdp_kernel_for(m)
+        rows.append(
+            row(f"bsdp/batch_m{m}_gemv", times["gemv"],
+                f"MOPS={sweep_macs/times['gemv']/1e6:.0f}")
+        )
+        rows.append(
+            row(f"bsdp/batch_m{m}_gemm", times["gemm"],
+                f"MOPS={sweep_macs/times['gemm']/1e6:.0f};"
+                f"gemv_over_gemm={times['gemv']/times['gemm']:.2f};"
+                f"dispatch={pick}")
+        )
+
     # resident-bytes ratio (the TPU memory-term lever, Fig. 9's real payoff)
-    bf16_bytes = K * N * 2
+    bf16_bytes = k * n * 2
     plane_bytes = planes.size * 4
     rows.append(
         row("bsdp/resident_bytes_ratio", 0.0,

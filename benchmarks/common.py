@@ -1,4 +1,10 @@
-"""Shared benchmark utilities: wall-clock timing of jitted callables."""
+"""Shared benchmark utilities: wall-clock timing of jitted callables.
+
+``set_smoke(True)`` flips every suite into CI mode: 1 timed iteration,
+1 warmup (compile) call, and each suite's ``smoke``-aware size tables —
+enough to execute every kernel path under interpret mode and catch
+benchmark bit-rot without paying full measurement cost.
+"""
 
 from __future__ import annotations
 
@@ -6,9 +12,18 @@ import time
 
 import jax
 
+SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
 
 def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
     """Median wall seconds per call of a jitted fn (block_until_ready)."""
+    if SMOKE:
+        repeats, warmup = 1, 1
     for _ in range(warmup):
         out = fn(*args)
     jax.block_until_ready(out)

@@ -10,6 +10,10 @@ The paper's two scenarios on one device (CPU stand-in; trends only):
 Derived: transfer:compute ratio per size — the paper's ~10:1 MV finding
 and the V-scenario crossover where compute dominates once the per-call
 payload shrinks to the vector.
+
+The batch sweep serves M ∈ {1, 8, 32, 128} token batches against the same
+resident weights in ``w8a8`` and ``bsdp`` modes — the per-token cost curve
+that motivates routing batched prefill through the bit-plane GEMM kernel.
 """
 
 from __future__ import annotations
@@ -20,16 +24,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks import common
+from benchmarks.common import row, time_fn
 from repro.core import qlinear
 
 SIZES = [(2048, 2048), (4096, 4096), (8192, 8192)]
+BATCH_SWEEP = (1, 8, 32, 128)
 
 
 def run() -> list[str]:
     rows = []
     rng = np.random.default_rng(0)
-    for k, n in SIZES:
+    sizes = SIZES[:1] if common.SMOKE else SIZES
+    for k, n in sizes:
         w_host = rng.normal(size=(k, n)).astype(np.float32) / np.sqrt(k)
         x = jnp.array(rng.normal(size=(1, k)).astype(np.float32))
         mb = w_host.nbytes / 1e6
@@ -62,6 +69,25 @@ def run() -> list[str]:
             row(f"gemv_e2e/MV_{mb:.0f}MB", t_mv,
                 f"transfer_to_compute={ratio:.1f};slowdown={t_mv/t_v:.1f}")
         )
+
+    # ------------------------------------------------------------------
+    # resident batch sweep: per-token serving cost vs batch size per mode
+    # ------------------------------------------------------------------
+    ks = ns = 512 if common.SMOKE else 1024
+    sweep = (1, 8) if common.SMOKE else BATCH_SWEEP
+    w = jnp.array(rng.normal(size=(ks, ns)).astype(np.float32) / np.sqrt(ks))
+    for mode in ("w8a8", "bsdp"):
+        state = qlinear.from_float(w, mode)
+        state = jax.tree_util.tree_map(jax.block_until_ready, state)
+        apply_v = jax.jit(lambda s, v: qlinear.apply(s, v))
+        for m in sweep:
+            x = jnp.array(rng.normal(size=(m, ks)).astype(np.float32))
+            t = time_fn(apply_v, state, x, repeats=3, warmup=1)
+            rows.append(
+                row(f"gemv_e2e/V_{mode}_m{m}", t,
+                    f"scenario=resident_batch;tokens_per_s={m/t:.0f};"
+                    f"us_per_token={t*1e6/m:.1f}")
+            )
     return rows
 
 

@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only bsdp``
+CI:      ``PYTHONPATH=src python -m benchmarks.run --smoke``  (1 iteration,
+         small shapes, interpret-mode kernels — asserted by
+         ``tests/test_bench_smoke.py`` so benchmark bit-rot is tier-1)
 """
 
 from __future__ import annotations
@@ -23,9 +26,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 iteration, reduced shapes (CI bit-rot check)")
     args = ap.parse_args()
 
-    from benchmarks import arith, bsdp, gemv_e2e, gemv_scale, roofline, transfer
+    from benchmarks import arith, bsdp, common, gemv_e2e, gemv_scale, roofline, transfer
+
+    if args.smoke:
+        common.set_smoke(True)
 
     suites = {
         "arith": arith.run,

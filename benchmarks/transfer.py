@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from benchmarks import common
 from benchmarks.common import row
 from repro.core import transfer
 
@@ -30,6 +31,8 @@ SIZES_MB = [8, 32, 128, 256]
 
 
 def _measure(fn, x, repeats=5):
+    if common.SMOKE:
+        repeats = 1
     jax.block_until_ready(fn(x))
     ts = []
     for _ in range(repeats):
@@ -43,7 +46,7 @@ def run() -> list[str]:
     n_dev = jax.device_count()
     mesh = jax.make_mesh((n_dev,), ("data",))
     rows = []
-    for mb in SIZES_MB:
+    for mb in (SIZES_MB[:1] if common.SMOKE else SIZES_MB):
         n_rows = mb * 1024 * 1024 // (1024 * 4)
         n_rows -= n_rows % n_dev
         x = np.random.default_rng(0).random((n_rows, 1024), np.float32)

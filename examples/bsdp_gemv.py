@@ -36,8 +36,12 @@ def main():
             jax.jit(lambda a: bsdp.bsdp_gemv(planes, a, form="popcount")),
         "mxu plane-matmul (TPU-native)":
             jax.jit(lambda a: bsdp.bsdp_gemv(planes, a, form="matmul")),
-        "pallas kernel (interpret)":
-            lambda a: ops.bsdp_gemv(a, planes),
+        "pallas gemv kernel (popcount)":
+            lambda a: ops.bsdp_matmul(a, planes, kernel="gemv"),
+        "pallas gemm kernel (batched serving)":
+            lambda a: ops.bsdp_matmul(a, planes, kernel="gemm"),
+        "pallas auto-dispatch (M>1 -> gemm)":
+            lambda a: ops.bsdp_matmul(a, planes),
     }
     for name, fn in forms.items():
         total = 0.0

@@ -20,7 +20,7 @@ from repro.models import model as model_lib
 from repro.serve import engine
 from repro.sharding import partitioning as P
 
-MODES = ["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp"]
+MODES = ["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp", "bsdp"]
 
 
 def main():
@@ -41,8 +41,10 @@ def main():
     reference = None
     print(f"{'mode':<10} {'tok/s':>8} {'resident MB':>12} {'agree@1':>8}")
     for mode in args.modes:
-        qp = engine.convert_params(params, cfg, mode, min_dim=16)
-        eng = engine.ServeEngine(qp, cfg, slots=3, max_len=64)
+        # residency conversion happens once, inside the engine (amortized)
+        eng = engine.ServeEngine(
+            params, cfg, slots=3, max_len=64, mode=mode, min_dim=16
+        )
         reqs = [eng.submit(p, args.max_new) for p in prompts]
         t0 = time.perf_counter()
         eng.run()
@@ -57,7 +59,7 @@ def main():
                 sum(a == b for a, b in zip(o, r)) for o, r in zip(outs, reference)
             )
             agree = hits / max(sum(len(r) for r in reference), 1)
-        mb = engine.resident_bytes(qp) / 1e6
+        mb = engine.resident_bytes(eng.params) / 1e6
         print(f"{mode:<10} {toks/dt:8.1f} {mb:12.2f} {agree:8.2f}")
     print("serve_quantized OK")
 

@@ -14,8 +14,13 @@ mode           weight storage / compute path
                int8×int8 MXU kernel (``gemv_int8``) — the NI path of §III-B
 ``w4a8``       packed int4 weights (2/byte, half the HBM bytes); int8 acts;
                in-kernel unpack (``gemv_int4``)
-``w4a4_bsdp``  bit-plane int4 weights + int4 acts; popcount kernel or MXU
-               plane-matmul (§IV) — activation encode fused per request
+``w4a4_bsdp``  bit-plane int4 weights + int4 acts; the faithful popcount
+               kernel at every batch size (§IV) — activation encode fused
+               per request
+``bsdp``       same bit-plane payload, batch-aware kernel dispatch: the
+               popcount GEMV kernel at M==1, the plane-pair GEMM kernel at
+               M>1 — the residency mode for batched prefill and
+               continuous-batched decode serving
 =============  =============================================================
 
 ``QuantLinear.from_float`` performs the one-time layout transform (quantize,
@@ -38,7 +43,10 @@ import jax.numpy as jnp
 from repro.core import bitplane, quant
 from repro.kernels import ops
 
-MODES = ("bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp")
+MODES = ("bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp", "bsdp")
+
+#: modes whose payload is the [N, 4, ceil(K/32)] uint32 bit-plane layout.
+BSDP_MODES = ("w4a4_bsdp", "bsdp")
 
 
 @jax.tree_util.register_dataclass
@@ -76,7 +84,7 @@ def from_float(w: jax.Array, mode: str = "w8a8") -> QuantLinearState:
             data=quant.pack_int4(q, axis=0), scale=qt.scale.reshape(1, n),
             mode=mode, k=k, n=n,
         )
-    # w4a4_bsdp: [N, 4, ceil(K/32)] uint32 planes — the paper's layout.
+    # bsdp modes: [N, 4, ceil(K/32)] uint32 planes — the paper's layout.
     q = bitplane.pad_to_word(qt.data, axis=0)
     planes = bitplane.encode_weights(q)
     return QuantLinearState(
@@ -105,9 +113,16 @@ def apply(
     elif mode == "w4a8":
         xq = quant.quantize_acts(x2.astype(jnp.float32), bits=8)
         out = ops.quant_matmul_int4(xq, state.data, state.scale, interpret=interpret)
-    elif mode == "w4a4_bsdp":
+    elif mode in BSDP_MODES:
         xq = quant.quantize_acts(x2.astype(jnp.float32), bits=4)
-        acc = ops.bsdp_gemv(xq.data, state.data, signed=True, interpret=interpret)
+        # "bsdp" is batch-aware: GEMV popcount kernel at M==1 (decode-style
+        # single token), plane-pair GEMM kernel at M>1 (batched prefill /
+        # multi-slot decode).  "w4a4_bsdp" keeps its documented faithful
+        # behavior: the popcount kernel at every batch size.
+        kernel = "gemv" if mode == "w4a4_bsdp" else None
+        acc = ops.bsdp_matmul(
+            xq.data, state.data, signed=True, interpret=interpret, kernel=kernel
+        )
         out = acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
     else:
         raise ValueError(mode)
@@ -126,5 +141,6 @@ def resident_bytes(state: QuantLinearState) -> int:
         "w8a8": state.k * state.n,
         "w4a8": -(-state.k // 2) * state.n,
         "w4a4_bsdp": 4 * 4 * (-(-state.k // 32)) * state.n,  # == k*n/2 bytes
+        "bsdp": 4 * 4 * (-(-state.k // 32)) * state.n,
     }[state.mode]
     return per + 4 * state.n  # + scales

@@ -25,7 +25,14 @@ import jax.numpy as jnp
 
 from repro.core import bitplane
 from repro.core.quant import QuantTensor
-from repro.kernels import bsdp_kernel, dequant_gemv, dim_kernel, gemv_int4, gemv_int8
+from repro.kernels import (
+    bsdp_gemm,
+    bsdp_kernel,
+    dequant_gemv,
+    dim_kernel,
+    gemv_int4,
+    gemv_int8,
+)
 
 
 def _on_tpu() -> bool:
@@ -141,6 +148,23 @@ def quant_matmul_int4(
 # BSDP (bit-plane int4 × int4)
 # ---------------------------------------------------------------------------
 
+#: per-kernel (preferred bm, bm align, preferred bkw) — bn is shared (128).
+_BSDP_BLOCKS = {
+    "gemv": (8, 8, 64),
+    "gemm": (128, 8, 32),
+}
+
+
+def bsdp_kernel_for(m: int) -> str:
+    """Batch-aware kernel choice.
+
+    M == 1 is the paper's GEMV-V request path: the AND+popcount kernel's
+    VPU work is minimal and avoids unpacking weight planes to bit matrices.
+    At M > 1 the per-(j,k) plane-pair contractions become real int8 MXU
+    matmuls whose cost amortizes over the batch — the GEMM kernel wins.
+    """
+    return "gemv" if m == 1 else "gemm"
+
 
 def bsdp_matmul_planes(
     x_planes: jax.Array,
@@ -151,24 +175,54 @@ def bsdp_matmul_planes(
     bm: Optional[int] = None,
     bn: Optional[int] = None,
     bkw: Optional[int] = None,
+    kernel: Optional[str] = None,
 ) -> jax.Array:
-    """Plane-form BSDP: ``[M,4,Kw] × [N,4,Kw] → int32 [M,N]`` (exact)."""
+    """Plane-form BSDP: ``[M,4,Kw] × [N,4,Kw] → int32 [M,N]`` (exact).
+
+    ``kernel``: ``None`` dispatches by batch (:func:`bsdp_kernel_for`);
+    ``"gemv"`` forces the faithful popcount kernel, ``"gemm"`` the batched
+    MXU plane-pair kernel.  Padding and block selection are shared.
+    """
     m, _, kw = x_planes.shape
     n = w_planes.shape[0]
-    bm = bm or _pick_block(m, 8, 8)
+    kernel = kernel or bsdp_kernel_for(m)
+    if kernel not in _BSDP_BLOCKS:
+        raise ValueError(f"kernel {kernel!r} not in {sorted(_BSDP_BLOCKS)}")
+    bm_pref, bm_align, bkw_pref = _BSDP_BLOCKS[kernel]
+    bm = bm or _pick_block(m, bm_pref, bm_align)
     bn = bn or _pick_block(n, 128, 128)
-    bkw = bkw or _pick_block(kw, 64, 8)
+    bkw = bkw or _pick_block(kw, bkw_pref, 8)
     mp, np_, kwp = _round_up(m, bm), _round_up(n, bn), _round_up(kw, bkw)
 
     def pad3(p, d0, d2):
         return jnp.pad(p, ((0, d0 - p.shape[0]), (0, 0), (0, d2 - p.shape[2])))
 
-    out = bsdp_kernel.bsdp_matmul(
+    fn = bsdp_kernel.bsdp_matmul if kernel == "gemv" else bsdp_gemm.bsdp_gemm
+    out = fn(
         pad3(x_planes, mp, kwp),
         pad3(w_planes, np_, kwp),
         bm=bm, bn=bn, bkw=bkw, signed=signed, interpret=_interpret(interpret),
     )
     return out[:m, :n]
+
+
+def bsdp_matmul(
+    x_i4: jax.Array,
+    w_planes: jax.Array,
+    *,
+    signed: bool = True,
+    interpret: Optional[bool] = None,
+    kernel: Optional[str] = None,
+) -> jax.Array:
+    """End-to-end batch-aware BSDP: raw int4 activations ``[M,K]`` × encoded
+    weights ``[N,4,K/32]`` → int32 ``[M,N]``.  Activation bit-plane encode is
+    fused under the same jit (the per-request transform the paper calls
+    "negligible compared to broadcast cost"); the kernel is chosen per batch
+    size unless forced via ``kernel``."""
+    x_planes = bitplane.encode_acts(bitplane.pad_to_word(x_i4))
+    return bsdp_matmul_planes(
+        x_planes, w_planes, signed=signed, interpret=interpret, kernel=kernel
+    )
 
 
 def bsdp_gemv(
@@ -178,12 +232,8 @@ def bsdp_gemv(
     signed: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """End-to-end: raw int4 activations ``[M,K]`` × encoded weights
-    ``[N,4,K/32]`` → int32 ``[M,N]``.  Activation bit-plane encode is fused
-    under the same jit (the per-request transform the paper calls
-    "negligible compared to broadcast cost")."""
-    x_planes = bitplane.encode_acts(bitplane.pad_to_word(x_i4))
-    return bsdp_matmul_planes(x_planes, w_planes, signed=signed, interpret=interpret)
+    """Back-compat alias of :func:`bsdp_matmul` (pre-GEMM entry point)."""
+    return bsdp_matmul(x_i4, w_planes, signed=signed, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -251,7 +301,9 @@ __all__ = [
     "quant_matmul",
     "matmul_int8_raw",
     "quant_matmul_int4",
+    "bsdp_kernel_for",
     "bsdp_matmul_planes",
+    "bsdp_matmul",
     "bsdp_gemv",
     "dim_matmul",
     "weight_only_matmul",

@@ -77,6 +77,20 @@ def bsdp_planes_ref(
     return acc
 
 
+def bsdp_gemm_ref(
+    x_planes: jax.Array, w_planes: jax.Array, *, signed: bool = True
+) -> jax.Array:
+    """Batched-GEMM oracle: decode both plane tensors, matmul in int32.
+
+    ``x_planes [M, 4, Kw]`` × ``w_planes [N, 4, Kw]`` → int32 ``[M, N]``.
+    This is the *definition* the GEMM kernel must reproduce exactly — no
+    plane algebra at all, just decode and contract.
+    """
+    x = bitplane.decode(x_planes, signed=signed)  # [M, K] int8
+    w = bitplane.decode(w_planes, signed=signed)  # [N, K] int8
+    return _dot_i32(x, w.T)
+
+
 def dim_w16a8_ref(x_i8: jax.Array, w_i16: jax.Array) -> jax.Array:
     """DIM oracle is simply the wide integer matmul, computed in int32."""
     return _dot_i32(x_i8, w_i16)
@@ -101,6 +115,7 @@ __all__ = [
     "matmul_int4_packed_ref",
     "bsdp_ref",
     "bsdp_planes_ref",
+    "bsdp_gemm_ref",
     "dim_w16a8_ref",
     "dequant_matmul_ref",
     "decode_weights_ref",

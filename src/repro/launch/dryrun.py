@@ -53,7 +53,13 @@ from jax.sharding import PartitionSpec
 from repro.configs import SHAPES, applicable_shapes, get_config
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.launch import hlo_stats
-from repro.launch.mesh import make_production_mesh, plan
+from repro.launch.mesh import (
+    cost_analysis,
+    jit_shardings,
+    make_production_mesh,
+    plan,
+    set_mesh,
+)
 from repro.models import model as model_lib
 from repro.models.attention import attn_dims
 from repro.optim import adamw as optim_lib
@@ -169,7 +175,7 @@ def _quant_leaf(spec, mode: str):
         data = P.ParamSpec(lead + (k, n), jnp.int8, lead_axes + (k_ax, n_ax))
     elif mode == "w4a8":
         data = P.ParamSpec(lead + (k // 2, n), jnp.int8, lead_axes + (k_ax, n_ax))
-    elif mode == "w4a4_bsdp":
+    elif mode in ("w4a4_bsdp", "bsdp"):
         kw = -(-k // 32)
         data = P.ParamSpec(
             lead + (n, 4, kw), jnp.uint32, lead_axes + (n_ax, None, None)
@@ -239,7 +245,8 @@ def model_flops(cfg: ModelConfig, cell: ShapeCell, tp: int) -> float:
     return 2.0 * n * tokens
 
 
-_QBYTES = {"bf16": 2.0, "w8a16": 1.0, "w8a8": 1.0, "w4a8": 0.5, "w4a4_bsdp": 0.5}
+_QBYTES = {"bf16": 2.0, "w8a16": 1.0, "w8a8": 1.0, "w4a8": 0.5,
+           "w4a4_bsdp": 0.5, "bsdp": 0.5}
 
 
 def analytic_traffic(
@@ -392,9 +399,10 @@ def lower_cell(
             ),
             mesh=mesh,
         )
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(
-                step, in_shardings=(params_sh, opt_sh, batch_sh),
+                step,
+                in_shardings=jit_shardings(mesh, (params_sh, opt_sh, batch_sh)),
                 donate_argnums=(0, 1),
             )
             lowered = jitted.lower(params_abs, opt_abs, batch_abs)
@@ -409,8 +417,11 @@ def lower_cell(
                 rules=rules, impl="jnp", probe=is_probe,
             )
 
-        with jax.set_mesh(mesh):
-            jitted = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh))
+        with set_mesh(mesh):
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=jit_shardings(mesh, (params_sh, batch_sh)),
+            )
             lowered = jitted.lower(params_abs, batch_abs)
             compiled = lowered.compile()
     else:  # decode
@@ -433,10 +444,10 @@ def lower_cell(
                 impl="jnp", probe=is_probe,
             )
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(
                 serve_step,
-                in_shardings=(params_sh, tok_sh, cache_sh, pos_sh),
+                in_shardings=jit_shardings(mesh, (params_sh, tok_sh, cache_sh, pos_sh)),
                 donate_argnums=(2,),
             )
             lowered = jitted.lower(params_abs, tok_abs, cache_abs, pos_abs)
@@ -445,7 +456,7 @@ def lower_cell(
     lower_s = time.time() - t0
     if print_analyses:
         print(compiled.memory_analysis())
-        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+        print({k: v for k, v in cost_analysis(compiled).items()
                if k in ("flops", "bytes accessed")})
     return _collect(
         compiled, mesh=mesh, arch=arch, shape=shape, multi_pod=multi_pod,
@@ -455,7 +466,7 @@ def lower_cell(
 
 
 def _collect(compiled, *, mesh, **meta) -> dict:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     mem = compiled.memory_analysis()
     coll = hlo_stats.collective_stats(compiled.as_text())
     mem_stats = {
@@ -568,7 +579,8 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
     ap.add_argument("--qmode", default="bf16",
-                    choices=["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp"])
+                    choices=["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp",
+                             "bsdp"])
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-probes", action="store_true",

@@ -27,6 +27,48 @@ from repro.models.attention import attn_dims
 from repro.sharding import partitioning as P
 
 
+def set_mesh(mesh: Mesh):
+    """``jax.set_mesh`` compat shim.
+
+    JAX ≥ 0.5 exposes ``jax.set_mesh(mesh)`` as the mesh-entering context
+    manager; older versions use the classic ``with mesh:`` context instead
+    (pair with :func:`jit_shardings` there, since bare PartitionSpecs are
+    not accepted by ``jax.jit``).  Always enter the returned object with
+    ``with``.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def jit_shardings(mesh: Mesh, tree):
+    """Make an ``in_shardings``/``out_shardings`` tree version-portable.
+
+    Under ``jax.set_mesh`` (JAX ≥ 0.5) bare :class:`PartitionSpec` leaves
+    resolve against the ambient mesh, so the tree passes through untouched.
+    Older ``jax.jit`` only accepts :class:`Sharding` objects — wrap every
+    PartitionSpec leaf in a :class:`NamedSharding` over ``mesh``.
+    """
+    if hasattr(jax, "set_mesh"):
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec) else s,
+        tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` compat: older JAX returns a per-device
+    LIST of dicts, newer JAX one dict.  Always return one dict (device 0)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -29,7 +29,7 @@ def main():
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mode", default="w8a8",
-                    choices=["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp"])
+                    choices=["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp", "bsdp"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)

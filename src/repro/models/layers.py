@@ -59,7 +59,7 @@ def _qlinear_jnp(state: qlinear.QuantLinearState, x: jax.Array) -> jax.Array:
             preferred_element_type=jnp.int32,
         )
         return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
-    if mode == "w4a4_bsdp":
+    if mode in qlinear.BSDP_MODES:
         from repro.core import bitplane
 
         xq = quant.quantize_acts(x.astype(jnp.float32), bits=4)

@@ -93,10 +93,25 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: optional teacher-forced continuation — when set, decode feeds these
+    #: tokens instead of argmax sampling.  Used for residency-mode logit
+    #: regression (identical token stream across modes) and speculative
+    #: verification.
+    force: Optional[np.ndarray] = None
 
 
 class ServeEngine:
-    """Greedy batched decoder over a fixed slot count (continuous batching)."""
+    """Greedy batched decoder over a fixed slot count (continuous batching).
+
+    ``mode`` selects the weight-residency mode (see
+    :data:`repro.core.qlinear.MODES`): parameters are converted ONCE at
+    engine construction — the paper's amortized layout transform — and every
+    prefill and multi-slot decode step thereafter runs through that mode's
+    kernels.  ``mode="bsdp"`` serves the whole continuous-batching traffic
+    through bit-plane weights: batched prefill ([P, K] activations) and
+    multi-slot decode ([slots, K]) both route to the plane-pair GEMM kernel,
+    single-token traffic to the popcount GEMV kernel.
+    """
 
     def __init__(
         self,
@@ -108,9 +123,20 @@ class ServeEngine:
         max_len: int = 256,
         rules=None,
         impl: Optional[str] = "jnp",
+        mode: str = "bf16",
+        min_dim: int = 64,
+        trace_logits: bool = False,
     ):
+        if mode != "bf16":
+            params = convert_params(params, cfg, mode, min_dim=min_dim)
         self.params, self.cfg, self.tp = params, cfg, tp
         self.slots, self.max_len, self.rules, self.impl = slots, max_len, rules, impl
+        self.mode = mode
+        self.trace_logits = trace_logits
+        #: when ``trace_logits``: [(kind, slots, np.ndarray logits)] in
+        #: execution order — ("prefill", (slot,), [vocab]) and
+        #: ("decode", live_slots, [n_live, vocab]) entries.
+        self.logit_trace: list = []
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.caches = None
@@ -122,10 +148,22 @@ class ServeEngine:
             )
         )
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
-        r = Request(uid=len(self.queue), prompt=np.asarray(prompt), max_new=max_new)
+    def submit(
+        self, prompt: np.ndarray, max_new: int, *, force: Optional[np.ndarray] = None
+    ) -> Request:
+        r = Request(
+            uid=len(self.queue), prompt=np.asarray(prompt), max_new=max_new,
+            force=None if force is None else np.asarray(force),
+        )
         self.queue.append(r)
         return r
+
+    @staticmethod
+    def _next_token(req: Request, logits_row: np.ndarray) -> int:
+        i = len(req.out)
+        if req.force is not None and i < len(req.force):
+            return int(req.force[i])
+        return int(np.argmax(logits_row))
 
     def _prefill_slot(self, slot: int, req: Request):
         """Prefill one request and splice its caches into the batch caches.
@@ -147,8 +185,10 @@ class ServeEngine:
         self.caches = jax.tree_util.tree_map(
             lambda full, one: _splice(full, one, slot), self.caches, cache1
         )
-        tok = int(np.argmax(np.asarray(logits)[0, -1]))
-        req.out.append(tok)
+        last = np.asarray(logits)[0, -1]
+        if self.trace_logits:
+            self.logit_trace.append(("prefill", (slot,), last))
+        req.out.append(self._next_token(req, last))
         self.pos[slot] = len(req.prompt)
         self.active[slot] = req
 
@@ -169,10 +209,12 @@ class ServeEngine:
         logits, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches, jnp.int32(pos)
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        step_logits = np.asarray(logits[:, 0])
+        if self.trace_logits:
+            self.logit_trace.append(("decode", tuple(live), step_logits[live]))
         for s in live:
             r = self.active[s]
-            r.out.append(int(nxt[s]))
+            r.out.append(self._next_token(r, step_logits[s]))
             self.pos[s] += 1
             if len(r.out) >= r.max_new:
                 r.done = True

@@ -1,0 +1,138 @@
+"""Hypothesis shim: real property testing when installed, deterministic
+fallback when not.
+
+The tier-1 suite must collect and run green in offline containers that do
+not ship ``hypothesis``.  When the real library is importable we re-export
+it untouched; otherwise this module provides just enough of the API surface
+the tests use — ``given``, ``settings``, and the ``integers`` / ``floats`` /
+``booleans`` / ``lists`` / ``sampled_from`` / ``arrays`` strategies — backed
+by a *fixed, seeded* example corpus so failures reproduce exactly.
+
+Fallback semantics: each ``@given`` test runs ``max_examples`` times (from
+``@settings``, default 20).  Example ``i`` draws from
+``np.random.default_rng(i)``, and the first draws of bounded strategies hit
+the min/max boundary values, mimicking hypothesis's shrink-toward-boundary
+bias.  No shrinking, no database — deterministic by construction.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A deterministic draw: (rng, example_index) -> value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_at(self, rng, i):
+            return self._draw(rng, i)
+
+    def _integers(min_value=0, max_value=2**31 - 1):
+        corpus = (min_value, max_value)
+
+        def draw(rng, i):
+            if i < len(corpus):
+                return corpus[i]
+            return int(rng.integers(min_value, max_value + 1))
+
+        return _Strategy(draw)
+
+    def _floats(min_value=-1e9, max_value=1e9, allow_nan=False, width=64,
+                **_kw):
+        del allow_nan, width  # the fallback never generates NaN
+
+        def draw(rng, i):
+            if i == 0:
+                return float(min_value)
+            if i == 1:
+                return float(max_value)
+            return float(rng.uniform(min_value, max_value))
+
+        return _Strategy(draw)
+
+    def _booleans():
+        return _Strategy(lambda rng, i: bool(i % 2) if i < 2 else bool(rng.integers(2)))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng, i: seq[i % len(seq)] if i < len(seq)
+                         else seq[int(rng.integers(len(seq)))])
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng, i):
+            size = min_size if i == 0 else int(rng.integers(min_size, max_size + 1))
+            return [elements.example_at(rng, i + j + 1) for j in range(size)]
+
+        return _Strategy(draw)
+
+    def _arrays(dtype, shape, elements=None):
+        """hypothesis.extra.numpy.arrays analogue (fixed-shape ints/floats)."""
+        def draw(rng, i):
+            dt = np.dtype(dtype)
+            if elements is not None:
+                flat = [elements.example_at(rng, i + j) for j in range(int(np.prod(shape)))]
+                return np.array(flat, dtype=dt).reshape(shape)
+            if np.issubdtype(dt, np.integer):
+                info = np.iinfo(dt)
+                return rng.integers(info.min, info.max + 1, size=shape).astype(dt)
+            return rng.standard_normal(size=shape).astype(dt)
+
+        return _Strategy(draw)
+
+    class _St:
+        integers = staticmethod(_integers)
+        floats = staticmethod(_floats)
+        booleans = staticmethod(_booleans)
+        sampled_from = staticmethod(_sampled_from)
+        lists = staticmethod(_lists)
+        arrays = staticmethod(_arrays)
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must NOT see the strategy
+            # parameters in the signature (it would resolve them as fixtures).
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = np.random.default_rng(i)
+                    drawn = [s.example_at(rng, i) for s in strategies]
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:  # noqa: BLE001 - re-raise with repro info
+                        raise AssertionError(
+                            f"falsifying example #{i} (deterministic corpus): "
+                            f"{fn.__name__}{tuple(drawn)!r}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper._compat_max_examples = getattr(
+                fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,57 @@
+"""Benchmark bit-rot guard: ``benchmarks/run.py --smoke`` must stay green.
+
+Runs the full harness as a subprocess (1 iteration per benchmark, reduced
+shapes, interpret-mode kernels) and asserts every suite produced rows —
+including the new BSDP batch-sweep rows that record the GEMV→GEMM
+crossover — with no suite-level ERROR rows.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def smoke_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    # benchmark subprocess measures wall-time only; keep the device count plain
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+class TestBenchSmoke:
+    def test_all_suites_emit_rows(self, smoke_output):
+        prefixes = ("arith/", "bsdp/", "transfer/", "gemv_e2e/", "gemv_scale/")
+        for p in prefixes:
+            assert any(
+                line.startswith(p) for line in smoke_output.splitlines()
+            ), f"no rows from suite {p}"
+
+    def test_no_error_rows(self, smoke_output):
+        assert "/ERROR" not in smoke_output
+
+    def test_batch_sweep_rows_present(self, smoke_output):
+        """The GEMV→GEMM crossover must land in the perf trajectory."""
+        for m in (1, 8):  # smoke sweep
+            assert f"bsdp/batch_m{m}_gemv" in smoke_output
+            assert f"bsdp/batch_m{m}_gemm" in smoke_output
+            assert f"gemv_e2e/V_bsdp_m{m}" in smoke_output
+        assert "dispatch=gemv" in smoke_output  # M==1 routed to GEMV kernel
+        assert "dispatch=gemm" in smoke_output  # M>1 routed to GEMM kernel
+
+    def test_rows_are_csv_shaped(self, smoke_output):
+        lines = [l for l in smoke_output.splitlines() if "/" in l and "," in l]
+        assert lines, "no CSV rows at all"
+        for line in lines:
+            name, us, derived = line.split(",", 2)
+            float(us)  # must parse

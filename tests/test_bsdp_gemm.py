@@ -1,0 +1,140 @@
+"""Batched bit-serial GEMM kernel: parity sweeps + dispatch routing.
+
+The GEMM kernel (``repro.kernels.bsdp_gemm``) must be integer-exact vs
+BOTH oracles — the decoded int32 matmul (:func:`ref.bsdp_gemm_ref`, the
+definition) and the plain int matmul of the raw int4 payloads
+(:func:`ref.bsdp_ref`) — and ``ops`` must route M==1 to the popcount GEMV
+kernel and M>1 to the GEMM kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import bitplane
+from repro.kernels import bsdp_gemm, bsdp_kernel, ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Ragged M/N/K (padding in every dim), aligned tiles, and degenerate M==1.
+SHAPES = [
+    (1, 32, 1),        # degenerate GEMV case
+    (1, 300, 130),     # GEMV, everything unaligned
+    (2, 64, 16),       # smallest real batch
+    (8, 256, 128),     # small decode batch, aligned
+    (5, 96, 33),       # ragged everything
+    (17, 320, 130),    # ragged, K > one word-block
+    (32, 512, 256),    # block-multiple
+    (130, 1024, 64),   # M > block, N < block
+]
+
+
+def _encoded(rng, m, k, n, signed):
+    lo, hi = (-8, 8) if signed else (0, 16)
+    a = jnp.array(rng.integers(lo, hi, (m, k)).astype(np.int8))
+    w = jnp.array(rng.integers(lo, hi, (k, n)).astype(np.int8))
+    return a, w, bitplane.encode_weights(bitplane.pad_to_word(w, axis=0))
+
+
+class TestBsdpGemmKernel:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    @pytest.mark.parametrize("signed", [True, False])
+    def test_exact_vs_oracles(self, m, k, n, signed):
+        rng = np.random.default_rng(m * 31 + k + n + signed)
+        a, w, wp = _encoded(rng, m, k, n, signed)
+        out = ops.bsdp_matmul(a, wp, signed=signed, kernel="gemm")
+        # vs the decoded int32 matmul definition
+        assert bool(jnp.all(out == ref.bsdp_ref(a, w)))
+        # vs the plane-level decode oracle
+        ap = bitplane.encode_acts(bitplane.pad_to_word(a))
+        exp = ref.bsdp_gemm_ref(ap, wp, signed=signed)
+        assert bool(jnp.all(out == exp))
+
+    @pytest.mark.parametrize("signed", [True, False])
+    def test_m1_degenerate_matches_gemv_kernel_bitforbit(self, signed):
+        """At M==1 the GEMM kernel and the popcount GEMV kernel must agree
+        on every bit of the int32 output."""
+        rng = np.random.default_rng(signed)
+        a, _, wp = _encoded(rng, 1, 320, 130, signed)
+        ap = bitplane.encode_acts(bitplane.pad_to_word(a))
+        via_gemm = ops.bsdp_matmul_planes(ap, wp, signed=signed, kernel="gemm")
+        via_gemv = ops.bsdp_matmul_planes(ap, wp, signed=signed, kernel="gemv")
+        assert via_gemm.dtype == via_gemv.dtype == jnp.int32
+        assert bool(jnp.all(via_gemm == via_gemv))
+
+    def test_block_size_invariance(self):
+        """Result must not depend on tiling — catches accumulation bugs."""
+        rng = np.random.default_rng(21)
+        a, w, wp = _encoded(rng, 32, 2048, 256, True)
+        ap = bitplane.encode(a)
+        base = ref.bsdp_ref(a, w)
+        for bm, bn, bkw in [(8, 128, 8), (32, 128, 64), (16, 256, 32)]:
+            out = ops.bsdp_matmul_planes(ap, wp, kernel="gemm", bm=bm, bn=bn, bkw=bkw)
+            assert bool(jnp.all(out == base)), (bm, bn, bkw)
+
+    def test_unknown_kernel_rejected(self):
+        rng = np.random.default_rng(3)
+        a, _, wp = _encoded(rng, 2, 64, 16, True)
+        ap = bitplane.encode_acts(bitplane.pad_to_word(a))
+        with pytest.raises(ValueError):
+            ops.bsdp_matmul_planes(ap, wp, kernel="mxu")
+
+
+class TestDispatch:
+    def test_kernel_for_batch(self):
+        assert ops.bsdp_kernel_for(1) == "gemv"
+        for m in (2, 8, 32, 128):
+            assert ops.bsdp_kernel_for(m) == "gemm", m
+
+    @pytest.mark.parametrize("m,expected", [(1, "gemv"), (2, "gemm"), (8, "gemm")])
+    def test_auto_routes_to_expected_kernel(self, m, expected, monkeypatch):
+        """ops dispatch actually invokes the chosen Pallas kernel."""
+        calls = []
+        real_gemv, real_gemm = bsdp_kernel.bsdp_matmul, bsdp_gemm.bsdp_gemm
+        monkeypatch.setattr(
+            bsdp_kernel, "bsdp_matmul",
+            lambda *a, **kw: calls.append("gemv") or real_gemv(*a, **kw),
+        )
+        monkeypatch.setattr(
+            bsdp_gemm, "bsdp_gemm",
+            lambda *a, **kw: calls.append("gemm") or real_gemm(*a, **kw),
+        )
+        rng = np.random.default_rng(m)
+        a, w, wp = _encoded(rng, m, 64, 16, True)
+        out = ops.bsdp_matmul(a, wp)
+        assert calls == [expected]
+        assert bool(jnp.all(out == ref.bsdp_ref(a, w)))
+
+    @pytest.mark.parametrize("m", [1, 2, 8])
+    def test_auto_exact(self, m):
+        rng = np.random.default_rng(100 + m)
+        a, w, wp = _encoded(rng, m, 300, 70, True)
+        assert bool(jnp.all(ops.bsdp_matmul(a, wp) == ref.bsdp_ref(a, w)))
+
+    def test_bsdp_gemv_alias_still_batched(self):
+        """Back-compat entry point accepts M>1 and stays exact."""
+        rng = np.random.default_rng(7)
+        a, w, wp = _encoded(rng, 4, 96, 20, True)
+        assert bool(jnp.all(ops.bsdp_gemv(a, wp) == ref.bsdp_ref(a, w)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=0, max_value=2**31),
+    st.booleans(),
+)
+def test_property_gemm_kernel_exact(m, kw, n, seed, signed):
+    """For ANY int4 batch, the GEMM kernel == the decoded int32 matmul."""
+    k = kw * 32
+    rng = np.random.default_rng(seed)
+    lo, hi = (-8, 8) if signed else (0, 16)
+    a = jnp.array(rng.integers(lo, hi, (m, k)).astype(np.int8))
+    w = jnp.array(rng.integers(lo, hi, (k, n)).astype(np.int8))
+    wp = bitplane.encode_weights(w)
+    out = ops.bsdp_matmul(a, wp, signed=signed, kernel="gemm")
+    assert bool(jnp.all(out == ref.bsdp_ref(a, w)))

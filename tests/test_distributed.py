@@ -12,6 +12,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
 from repro.configs import get_smoke_config
 from repro.distributed import collectives, pipeline, resilience
+from repro.launch.mesh import set_mesh
 from repro.models import model as model_lib
 from repro.sharding import partitioning as P
 
@@ -40,7 +41,7 @@ class TestShardedTraining:
         mesh = _mesh()
         rules = P.base_rules(fsdp=False, data_axes=("pod", "data"))
         spec_tree = model_lib.specs(cfg, tp=1)  # dims divisible by tp=2
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params_sh = jax.device_put(params, P.shardings(spec_tree, mesh, rules))
             batch_sh = {
                 k: jax.device_put(

@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as PS
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeCell
 from repro.launch import hlo_stats
-from repro.launch.mesh import plan
+from repro.launch.mesh import cost_analysis, jit_shardings, plan, set_mesh
 from repro.models import model as model_lib
 from repro.optim import adamw as optim_lib
 from repro.sharding import partitioning as P
@@ -37,10 +37,11 @@ class TestHloStats:
 
     def test_known_allreduce_bytes(self):
         mesh = jax.make_mesh((8,), ("data",))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             f = jax.jit(
                 lambda x: jnp.sum(x, axis=0),
-                in_shardings=PS("data"), out_shardings=PS(),
+                in_shardings=jit_shardings(mesh, PS("data")),
+                out_shardings=jit_shardings(mesh, PS()),
             )
             comp = f.lower(jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile()
         st = hlo_stats.collective_stats(comp.as_text())
@@ -86,16 +87,16 @@ class TestProbeDifferencing:
                 c, opt, tp=tp, rules=rules,
                 step_cfg=TrainStepConfig(microbatches=1, remat=True, probe=probe),
             )
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 comp = jax.jit(
                     step,
-                    in_shardings=(
+                    in_shardings=jit_shardings(mesh, (
                         P.pspecs(spec_tree, rules),
                         opt_shardings(spec_tree, rules),
                         batch_sh,
-                    ),
+                    )),
                 ).lower(params_abs, opt_abs, batch_abs).compile()
-            return float(comp.cost_analysis()["flops"])
+            return float(cost_analysis(comp)["flops"])
 
         f1 = lower_flops(dataclasses.replace(cfg, n_layers=1), probe=True)
         f2 = lower_flops(dataclasses.replace(cfg, n_layers=2), probe=True)
@@ -123,17 +124,17 @@ class TestProbeDifferencing:
             cfg, opt, tp=2, rules=rules,
             step_cfg=TrainStepConfig(microbatches=1, remat=True, probe=False),
         )
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             comp = jax.jit(
                 step,
-                in_shardings=(
+                in_shardings=jit_shardings(mesh, (
                     P.pspecs(spec_tree, rules),
                     opt_shardings(spec_tree, rules),
                     batch_sh,
-                ),
+                )),
             ).lower(P.abstract(spec_tree), opt.init_abstract(P.abstract(spec_tree)),
                     batch_abs).compile()
-        scanned = float(comp.cost_analysis()["flops"])
+        scanned = float(cost_analysis(comp)["flops"])
         # the 4-layer unrolled equivalent must be substantially larger
         # (scan body counted once)
         assert scanned > 0
@@ -159,11 +160,12 @@ class TestSmallMeshLowering:
             params_abs = P.abstract(spec_tree)
             batch_abs, batch_sh = dr.batch_specs(cfg, cell, rules)
             step = make_train_step(cfg, opt, tp=tp, rules=rules)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 comp = jax.jit(
                     step,
-                    in_shardings=(P.pspecs(spec_tree, rules),
-                                  dr.opt_shardings(spec_tree, rules), batch_sh),
+                    in_shardings=jit_shardings(
+                        mesh, (P.pspecs(spec_tree, rules),
+                               dr.opt_shardings(spec_tree, rules), batch_sh)),
                 ).lower(params_abs, opt.init_abstract(params_abs), batch_abs
                         ).compile()
         elif kind == "prefill":
@@ -174,8 +176,10 @@ class TestSmallMeshLowering:
                 return model_lib.prefill(p, b, cfg, tp=tp, max_len=64,
                                          rules=rules, impl="jnp")
 
-            with jax.set_mesh(mesh):
-                comp = jax.jit(pf, in_shardings=(params_sh, batch_sh)).lower(
+            with set_mesh(mesh):
+                comp = jax.jit(
+                    pf, in_shardings=jit_shardings(mesh, (params_sh, batch_sh))
+                ).lower(
                     params_abs, batch_abs).compile()
         else:
             params_abs, params_sh = dr._serve_params(spec_tree, "w8a8", rules)
@@ -190,16 +194,17 @@ class TestSmallMeshLowering:
                 return model_lib.decode_step(p, t, c, pos, cfg, tp=tp,
                                              rules=rules, impl="jnp")
 
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 comp = jax.jit(
                     ds,
-                    in_shardings=(params_sh, PS(("pod", "data")), cache_sh,
-                                  PS(("pod", "data"))),
+                    in_shardings=jit_shardings(
+                        mesh, (params_sh, PS(("pod", "data")), cache_sh,
+                               PS(("pod", "data")))),
                 ).lower(
                     params_abs,
                     jax.ShapeDtypeStruct((8, 1), jnp.int32),
                     cache_abs,
                     jax.ShapeDtypeStruct((8,), jnp.int32),
                 ).compile()
-        assert comp.cost_analysis()["flops"] > 0
+        assert cost_analysis(comp)["flops"] > 0
         assert comp.memory_analysis() is not None

@@ -1,5 +1,7 @@
 """Model-zoo tests: per-arch smoke, decode consistency, component oracles."""
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,7 +35,9 @@ def _batch(cfg, rng, b=B, s=S):
 def _setup(name):
     cfg = get_smoke_config(name)
     params = P.materialize(model.specs(cfg, tp=1), jax.random.PRNGKey(0))
-    rng = np.random.default_rng(hash(name) % 2**31)
+    # crc32, not hash(): str hashing is randomized per process, which made
+    # the drawn batch — and marginal assertions downstream — nondeterministic
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
     return cfg, params, _batch(cfg, rng)
 
 

@@ -1,0 +1,117 @@
+"""Serve-path regression: ServeEngine mode="bsdp" vs mode="bf16".
+
+The engine converts weights to bit-plane residency once at construction and
+then serves batched prefill + continuous-batched decode through the BSDP
+kernels.  With an identical teacher-forced token stream, every recorded
+logit vector must match the bf16 engine within int4 quantization tolerance,
+across a schedule that includes one mid-stream slot refill (a request
+finishing early and its slot being re-prefilled while decode continues).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import qlinear
+from repro.models import model as model_lib
+from repro.serve import engine
+from repro.sharding import partitioning as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+VOCAB = 128
+
+
+def _setup():
+    cfg = get_smoke_config("qwen3-1.7b").scaled(n_layers=2, vocab_size=VOCAB)
+    params = P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_engine(params, cfg, mode):
+    """slots=2, 3 requests: r1 finishes after 2 tokens, freeing its slot for
+    r2's mid-stream prefill; decode continues for ≥3 steps after that."""
+    rng = np.random.default_rng(0)
+    eng = engine.ServeEngine(
+        params, cfg, slots=2, max_len=32, mode=mode, min_dim=16,
+        trace_logits=True,
+    )
+    lens, max_news = (5, 3, 7), (6, 2, 4)
+    reqs = [
+        eng.submit(
+            rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn,
+            force=rng.integers(0, VOCAB, size=(mn,)).astype(np.int32),
+        )
+        for n, mn in zip(lens, max_news)
+    ]
+    eng.run()
+    return eng, reqs
+
+
+class TestServeBsdpRegression:
+    def test_bsdp_logits_match_bf16_within_quant_tolerance(self):
+        cfg, params = _setup()
+        ref_eng, ref_reqs = _run_engine(params, cfg, "bf16")
+        bsdp_eng, bsdp_reqs = _run_engine(params, cfg, "bsdp")
+
+        # identical schedule: same trace structure, incl. the mid-stream
+        # refill prefill, and identical (teacher-forced) token streams
+        kinds = [(k, s) for k, s, _ in ref_eng.logit_trace]
+        assert kinds == [(k, s) for k, s, _ in bsdp_eng.logit_trace]
+        assert sum(1 for k, _, _ in ref_eng.logit_trace if k == "prefill") == 3
+        n_decode = sum(1 for k, _, _ in ref_eng.logit_trace if k == "decode")
+        assert n_decode >= 3
+        # the refill prefill happens *between* decode steps (mid-stream)
+        first_decode = kinds.index(("decode", (0, 1)))
+        assert any(k == "prefill" for k, _ in kinds[first_decode + 1:])
+        for a, b in zip(ref_reqs, bsdp_reqs):
+            assert a.out == b.out and a.done and b.done
+
+        # every logit vector within int4 quantization tolerance of bf16
+        for (_, _, lr), (_, _, lb) in zip(ref_eng.logit_trace, bsdp_eng.logit_trace):
+            lr, lb = np.asarray(lr, np.float32), np.asarray(lb, np.float32)
+            assert lr.shape == lb.shape
+            scale = np.abs(lr).max() + 1e-6
+            assert np.abs(lr - lb).max() / scale < 0.5, "logit drift beyond int4 noise"
+            cos = float(
+                (lr.ravel() @ lb.ravel())
+                / (np.linalg.norm(lr) * np.linalg.norm(lb) + 1e-9)
+            )
+            assert cos > 0.9, f"cosine {cos} too low for quantization noise"
+
+    def test_bsdp_engine_matches_direct_quantized_model(self):
+        """Engine mode="bsdp" prefill logits == direct prefill on converted
+        params — the engine adds scheduling, not numerics."""
+        cfg, params = _setup()
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, VOCAB, size=(6,)).astype(np.int32)
+
+        eng = engine.ServeEngine(
+            params, cfg, slots=1, max_len=32, mode="bsdp", min_dim=16,
+            trace_logits=True,
+        )
+        eng.submit(prompt, 1)
+        eng.step()
+        (_, _, eng_logits) = eng.logit_trace[0]
+
+        qparams = engine.convert_params(params, cfg, "bsdp", min_dim=16)
+        import jax.numpy as jnp
+
+        direct, _ = model_lib.prefill(
+            qparams, {"tokens": jnp.asarray(prompt[None, :])}, cfg,
+            tp=1, max_len=32, impl="jnp",
+        )
+        np.testing.assert_allclose(
+            np.asarray(eng_logits), np.asarray(direct)[0, -1], rtol=1e-5, atol=1e-5
+        )
+
+    def test_bsdp_mode_converts_leaves_and_shrinks_residency(self):
+        cfg, params = _setup()
+        qparams = engine.convert_params(params, cfg, "bsdp", min_dim=16)
+        leaves = jax.tree_util.tree_leaves(
+            qparams, is_leaf=lambda x: isinstance(x, qlinear.QuantLinearState)
+        )
+        states = [l for l in leaves if isinstance(l, qlinear.QuantLinearState)]
+        assert states and all(s.mode == "bsdp" for s in states)
+        assert engine.resident_bytes(qparams) < engine.resident_bytes(params)
