@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
     bsdp        Fig. 9        bit-serial INT4 dot product vs baselines
     transfer    Fig. 11       topology-aware vs naive host→device feeding
     gemv_e2e    Fig. 12       GEMV-MV vs GEMV-V compute:transfer split
+                              (+ per-layer mixed-ResidencySpec serving row)
     gemv_scale  Fig. 13       full-system GOPS vs CPU server (derived)
     roofline    (ours)        §Roofline summary from dry-run records
 

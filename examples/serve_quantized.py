@@ -3,10 +3,13 @@
     PYTHONPATH=src python examples/serve_quantized.py [--mode w4a4_bsdp]
 
 Serves a small causal LM with BATCHED, continuously-scheduled requests
-through :class:`repro.serve.engine.ServeEngine` under every weight
-residency mode, and reports per-mode throughput, resident weight bytes,
-and greedy-output agreement vs the bf16 reference — the serving analogue
-of the paper's Fig. 9/13 ladder.
+through :class:`repro.serve.engine.ServeEngine` under every registered
+weight-residency format — plus a mixed per-layer ResidencySpec policy
+(BSDP for the FFN GEMVs, w8a16 attention, w8a8 default) — and reports
+per-mode throughput, resident weight bytes, and greedy-output agreement
+vs the bf16 reference: the serving analogue of the paper's Fig. 9/13
+ladder.  ``--modes`` accepts format names or policy strings like
+``ffn=bsdp,default=w8a8``.
 """
 
 import argparse
@@ -16,11 +19,12 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import residency
 from repro.models import model as model_lib
 from repro.serve import engine
 from repro.sharding import partitioning as P
 
-MODES = ["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp", "bsdp"]
+MODES = list(residency.formats()) + ["ffn=bsdp,mixer=w8a16,default=w8a8"]
 
 
 def main():
@@ -39,7 +43,7 @@ def main():
     ]
 
     reference = None
-    print(f"{'mode':<10} {'tok/s':>8} {'resident MB':>12} {'agree@1':>8}")
+    print(f"{'mode':<34} {'tok/s':>8} {'resident MB':>12} {'agree@1':>8}")
     for mode in args.modes:
         # residency conversion happens once, inside the engine (amortized)
         eng = engine.ServeEngine(
@@ -60,7 +64,7 @@ def main():
             )
             agree = hits / max(sum(len(r) for r in reference), 1)
         mb = engine.resident_bytes(eng.params) / 1e6
-        print(f"{mode:<10} {toks/dt:8.1f} {mb:12.2f} {agree:8.2f}")
+        print(f"{eng.mode:<34} {toks/dt:8.1f} {mb:12.2f} {agree:8.2f}")
     print("serve_quantized OK")
 
 

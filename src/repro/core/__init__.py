@@ -4,7 +4,8 @@
 - :mod:`repro.core.bitplane`  -- BSDP bit-plane layout (paper SIV)
 - :mod:`repro.core.bsdp`      -- bit-serial dot-product math
 - :mod:`repro.core.dim`       -- decomposed wide-int matmul (paper SIII-C)
-- :mod:`repro.core.qlinear`   -- quantized linear layer w/ kernel dispatch
+- :mod:`repro.core.residency` -- residency-format registry + per-layer specs
+- :mod:`repro.core.qlinear`   -- stable import surface over the registry
 - :mod:`repro.core.transfer`  -- topology-aware transfer planning (paper SV)
 """
 
@@ -13,4 +14,12 @@ from repro.core.quant import (  # noqa: F401
     quantize,
     quantize_acts,
     quantize_weights,
+)
+from repro.core.residency import (  # noqa: F401
+    KernelPolicy,
+    QuantLinearState,
+    ResidencyFormat,
+    ResidencySpec,
+    get_format,
+    register_format,
 )

@@ -1,11 +1,12 @@
 """QuantLinear: the paper's weight-resident quantized GEMV as a layer.
 
-A :class:`QuantLinear` owns a weight matrix in one of five residency modes
-(the paper's GEMV-V scenario — weights preloaded in device memory — is the
-point of all of them):
+A quantized linear layer is a :class:`QuantLinearState` tagged with the
+name of a registered :class:`repro.core.residency.ResidencyFormat` (the
+paper's GEMV-V scenario — weights preloaded in device memory — is the point
+of all of them).  The formats seeded in the registry:
 
 =============  =============================================================
-mode           weight storage / compute path
+format         weight storage / compute path
 =============  =============================================================
 ``bf16``       plain bf16 matmul — the unquantized reference
 ``w8a16``      int8 weights + per-channel scale; bf16 acts; fused-dequant
@@ -14,133 +15,55 @@ mode           weight storage / compute path
                int8×int8 MXU kernel (``gemv_int8``) — the NI path of §III-B
 ``w4a8``       packed int4 weights (2/byte, half the HBM bytes); int8 acts;
                in-kernel unpack (``gemv_int4``)
-``w4a4_bsdp``  bit-plane int4 weights + int4 acts; the faithful popcount
-               kernel at every batch size (§IV) — activation encode fused
-               per request
-``bsdp``       same bit-plane payload, batch-aware kernel dispatch: the
-               popcount GEMV kernel at M==1, the plane-pair GEMM kernel at
-               M>1 — the residency mode for batched prefill and
-               continuous-batched decode serving
+``w4a4_bsdp``  bit-plane int4 weights + int4 acts; ``KernelPolicy`` pins the
+               faithful popcount kernel at every batch size (§IV)
+``bsdp``       same bit-plane payload; ``KernelPolicy(gemv, gemm)`` routes
+               M==1 to the popcount GEMV kernel and M>1 to the plane-pair
+               GEMM kernel — the residency for batched serving
 =============  =============================================================
 
-``QuantLinear.from_float`` performs the one-time layout transform (quantize,
-pack, bit-plane encode) that the paper amortizes over many GEMV calls; it
-runs at model-load/checkpoint-convert time, never on the request path.
+Everything above is *data* owned by :mod:`repro.core.residency`: each row is
+one ``ResidencyFormat`` instance providing ``encode`` (the one-time layout
+transform, amortized over many GEMV calls per the paper's §IV-B argument),
+the kernel and pure-jnp apply paths, the dry-run ``abstract_state`` twin,
+sharding axes, and byte accounting.  Adding a format is one ≤20-line class
+plus ``register_format()`` — no call-site edits (see the residency module
+docstring for the template).
 
-Because the per-mode payloads shard identically (N on the ``model`` axis,
-K replicated or FSDP-sharded), a served model can flip modes per-layer —
-e.g. BSDP for the giant FFN GEMVs, w8a16 for the small latent projections.
+Residency is selected per layer by a :class:`repro.core.residency.
+ResidencySpec` policy map (``{"ffn": "bsdp", "mixer": "w8a16",
+"default": "w8a8"}`` glob-matched against parameter paths) — e.g. BSDP for
+the giant FFN GEMVs, w8a16 for the small latent projections.  The per-format
+payloads shard via each format's ``data_axes`` (N on the ``model`` axis for
+bit-planes, K replicated or FSDP-sharded), so mixed trees shard cleanly.
+
+This module remains the stable import surface; the semantics live in
+:mod:`repro.core.residency` (single source — the serving engine, dense
+dispatch, absorbed decode and dry-run all route through the registry).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import bitplane, quant
-from repro.kernels import ops
-
-MODES = ("bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp", "bsdp")
-
-#: modes whose payload is the [N, 4, ceil(K/32)] uint32 bit-plane layout.
-BSDP_MODES = ("w4a4_bsdp", "bsdp")
+from repro.core import residency
+from repro.core.residency import (  # noqa: F401  (stable re-exports)
+    QuantLinearState,
+    from_float,
+    apply,
+    resident_bytes,
+)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class QuantLinearState:
-    """Pytree payload for one quantized linear layer."""
-
-    data: jax.Array  # mode-dependent payload (see module docstring)
-    scale: jax.Array  # [1, N] per-output-channel (f32)
-    mode: str = dataclasses.field(metadata=dict(static=True), default="w8a8")
-    k: int = dataclasses.field(metadata=dict(static=True), default=0)  # logical K
-    n: int = dataclasses.field(metadata=dict(static=True), default=0)  # logical N
-
-
-def from_float(w: jax.Array, mode: str = "w8a8") -> QuantLinearState:
-    """One-time convert of a float ``[K, N]`` weight to residency ``mode``."""
-    if mode not in MODES:
-        raise ValueError(f"mode {mode!r} not in {MODES}")
-    k, n = w.shape
-    if mode == "bf16":
-        return QuantLinearState(
-            data=w.astype(jnp.bfloat16), scale=jnp.ones((1, n), jnp.float32),
-            mode=mode, k=k, n=n,
+def __getattr__(name: str):
+    # Registry-derived back-compat attributes, computed on ACCESS so a
+    # format added via register_format() after this module is imported
+    # (the advertised extension flow) is never invisible here.
+    #   MODES       registered residency format names
+    #   BSDP_MODES  formats whose payload is the [N, 4, ceil(K/32)] planes
+    if name == "MODES":
+        return residency.formats()
+    if name == "BSDP_MODES":
+        return tuple(
+            n for n in residency.formats()
+            if residency.get_format(n).is_bitplane
         )
-    if mode in ("w8a16", "w8a8"):
-        qt = quant.quantize_weights(w, bits=8)
-        return QuantLinearState(
-            data=qt.data, scale=qt.scale.reshape(1, n), mode=mode, k=k, n=n
-        )
-    qt = quant.quantize_weights(w, bits=4)
-    if mode == "w4a8":
-        kp = k + (k % 2)
-        q = jnp.pad(qt.data, ((0, kp - k), (0, 0)))
-        return QuantLinearState(
-            data=quant.pack_int4(q, axis=0), scale=qt.scale.reshape(1, n),
-            mode=mode, k=k, n=n,
-        )
-    # bsdp modes: [N, 4, ceil(K/32)] uint32 planes — the paper's layout.
-    q = bitplane.pad_to_word(qt.data, axis=0)
-    planes = bitplane.encode_weights(q)
-    return QuantLinearState(
-        data=planes, scale=qt.scale.reshape(1, n), mode=mode, k=k, n=n
-    )
-
-
-def apply(
-    state: QuantLinearState,
-    x: jax.Array,
-    *,
-    interpret: Optional[bool] = None,
-) -> jax.Array:
-    """``x [..., K] → [..., N]`` through the mode's kernel. Returns f32."""
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    mode = state.mode
-
-    if mode == "bf16":
-        out = jnp.dot(x2.astype(jnp.bfloat16), state.data).astype(jnp.float32)
-    elif mode == "w8a16":
-        out = ops.weight_only_matmul(x2.astype(jnp.float32), _as_qt(state), interpret=interpret)
-    elif mode == "w8a8":
-        xq = quant.quantize_acts(x2.astype(jnp.float32), bits=8)
-        out = ops.quant_matmul(xq, _as_qt(state), interpret=interpret)
-    elif mode == "w4a8":
-        xq = quant.quantize_acts(x2.astype(jnp.float32), bits=8)
-        out = ops.quant_matmul_int4(xq, state.data, state.scale, interpret=interpret)
-    elif mode in BSDP_MODES:
-        xq = quant.quantize_acts(x2.astype(jnp.float32), bits=4)
-        # "bsdp" is batch-aware: GEMV popcount kernel at M==1 (decode-style
-        # single token), plane-pair GEMM kernel at M>1 (batched prefill /
-        # multi-slot decode).  "w4a4_bsdp" keeps its documented faithful
-        # behavior: the popcount kernel at every batch size.
-        kernel = "gemv" if mode == "w4a4_bsdp" else None
-        acc = ops.bsdp_matmul(
-            xq.data, state.data, signed=True, interpret=interpret, kernel=kernel
-        )
-        out = acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
-    else:
-        raise ValueError(mode)
-    return out.reshape(*lead, state.n)
-
-
-def _as_qt(state: QuantLinearState) -> quant.QuantTensor:
-    return quant.QuantTensor(data=state.data, scale=state.scale, bits=8, axis=0)
-
-
-def resident_bytes(state: QuantLinearState) -> int:
-    """HBM bytes of the resident weight — the roofline 'memory term' input."""
-    per = {
-        "bf16": 2 * state.k * state.n,
-        "w8a16": state.k * state.n,
-        "w8a8": state.k * state.n,
-        "w4a8": -(-state.k // 2) * state.n,
-        "w4a4_bsdp": 4 * 4 * (-(-state.k // 32)) * state.n,  # == k*n/2 bytes
-        "bsdp": 4 * 4 * (-(-state.k // 32)) * state.n,
-    }[state.mode]
-    return per + 4 * state.n  # + scales
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

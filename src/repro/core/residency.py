@@ -1,0 +1,581 @@
+"""Residency-format registry: declarative weight-residency formats + policies.
+
+The paper's central lever is choosing the right weight-resident layout and
+kernel per workload (§III native-instruction int8 paths, §IV bit-plane
+BSDP).  This module makes that choice **data instead of code**: every
+residency format is a :class:`ResidencyFormat` object registered by name,
+and every consumer — ``layers.dense``, the absorbed MLA decode, the serving
+engine, the dry-run byte accounting — asks the registry instead of
+switching on mode strings.
+
+A format owns the full lifecycle of one resident layout:
+
+``encode(w)``            one-time ``[K, N]`` float → :class:`QuantLinearState`
+                         (the paper's amortized GEMV-V layout transform)
+``apply(state, x)``      the kernel path (Pallas, batch-aware dispatch via
+                         :class:`KernelPolicy`)
+``apply_jnp(state, x)``  the pure-jnp path (dry-run lowering / jit'd serving
+                         without interpret-mode scaffolding)
+``to_float(state)``      dequantized ``[K, N]`` — absorbed-decode support
+``abstract_state(k, n)`` ShapeDtypeStruct twin of ``encode`` output — the
+                         dry-run lowers 398B configs without materializing
+                         a weight, and byte accounting derives from THIS,
+                         so it can never drift from real residency
+``data_axes(...)``       logical sharding axes of the payload (e.g. the
+                         ``[N, 4, Kw]`` plane layout shards N on the model
+                         axis so TP shards own contiguous planes)
+``resident_bytes(state)``HBM bytes of the resident weight (generic: payload
+                         + scales — identical for real and abstract states)
+
+Registering a new format is ~15 lines; see :class:`BitPlaneFormat` or the
+doctest-style sketch::
+
+    class MyFormat(ResidencyFormat):
+        name = "w2a8_groups"
+        def encode(self, w): ...        # -> QuantLinearState(mode=self.name)
+        def apply(self, state, x, *, batch=None, interpret=None): ...
+        def apply_jnp(self, state, x): ...
+        def to_float(self, state): ...  # or supports_absorbed_decode = False
+        def abstract_state(self, k, n): ...
+        def data_axes(self, k_ax, n_ax): ...
+
+    register_format(MyFormat())
+
+after which ``ServeEngine(mode="w2a8_groups")``, per-layer policies,
+``launch/serve.py --mode`` and the dry-run byte accounting all work with no
+call-site edits.
+
+Per-layer policies
+------------------
+:class:`ResidencySpec` maps parameter-tree paths to formats by glob rules,
+first match wins::
+
+    ResidencySpec.parse({"ffn": "bsdp", "mixer": "w8a16", "default": "w8a8"})
+    ResidencySpec.parse("ffn=bsdp,mixer=w8a16,default=w8a8")   # CLI form
+    ResidencySpec.parse("bsdp")                                # uniform
+
+Patterns are matched against dot-joined tree paths
+(``stack.slot0.ffn.w_in``); a bare name like ``"ffn"`` matches that segment
+anywhere in the path.  This is what serves BSDP for the giant FFN GEMVs
+while the small latent projections stay w8a16 — the per-layer mixed
+residency the module docstring of :mod:`repro.core.qlinear` promises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Mapping, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane, quant
+
+# Reference shape for bytes-per-element derivation: multiples of 64 so every
+# format's padding (int4 pairs, 32-element plane words) divides exactly.
+_REF_K = _REF_N = 512
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantLinearState:
+    """Pytree payload for one resident linear layer (format-tagged)."""
+
+    data: jax.Array  # format-dependent payload (see the format's docstring)
+    scale: jax.Array  # [1, N] per-output-channel (f32)
+    mode: str = dataclasses.field(metadata=dict(static=True), default="w8a8")
+    k: int = dataclasses.field(metadata=dict(static=True), default=0)  # logical K
+    n: int = dataclasses.field(metadata=dict(static=True), default=0)  # logical N
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Batch-aware kernel dispatch as data, not code.
+
+    ``gemv`` names the kernel used at M == 1 (the paper's GEMV-V request
+    path), ``gemm`` the kernel at M > 1 (batched prefill / multi-slot
+    decode).  ``None`` means the format has a single kernel and nothing to
+    choose.  New kernel forms (fused single-contraction GEMM, autotuned
+    blocks) plug in here without touching any call site.
+    """
+
+    gemv: Optional[str] = None
+    gemm: Optional[str] = None
+
+    def kernel_for(self, m: int) -> Optional[str]:
+        return self.gemv if m == 1 else self.gemm
+
+
+def _nbytes(a) -> int:
+    """Works for real arrays AND ShapeDtypeStructs (abstract accounting)."""
+    size = 1
+    for d in a.shape:
+        size *= d
+    return size * jnp.dtype(a.dtype).itemsize
+
+
+class ResidencyFormat:
+    """Base class / protocol for one weight-residency format.
+
+    Subclasses set ``name`` and implement the layout lifecycle; the base
+    class provides the derived accounting (``resident_bytes``, ``qbytes``)
+    generically from the payload so it cannot drift from ``encode``.
+    """
+
+    name: str = ""
+    #: the payload is the [N, 4, ceil(K/32)] uint32 bit-plane layout
+    is_bitplane: bool = False
+    #: absorbed MLA decode can dequantize this format to a float matrix
+    supports_absorbed_decode: bool = True
+    #: identity residency: ``convert_params`` leaves parameters as plain
+    #: float arrays instead of wrapping them in a QuantLinearState
+    keeps_float_params: bool = False
+    kernel_policy: KernelPolicy = KernelPolicy()
+
+    # -- layout lifecycle (per-format) ----------------------------------
+    def encode(self, w: jax.Array) -> QuantLinearState:
+        """One-time ``[K, N]`` float → resident state (model-load time)."""
+        raise NotImplementedError
+
+    def apply(
+        self,
+        state: QuantLinearState,
+        x: jax.Array,
+        *,
+        batch: Optional[int] = None,
+        interpret: Optional[bool] = None,
+    ) -> jax.Array:
+        """Kernel path: ``x [M, K] → f32 [M, N]``; ``batch`` drives
+        :attr:`kernel_policy` dispatch (defaults to ``x.shape[0]``)."""
+        raise NotImplementedError
+
+    def apply_jnp(self, state: QuantLinearState, x: jax.Array) -> jax.Array:
+        """Pure-jnp path ``[..., K] → [..., N]`` in ``x.dtype`` — used by the
+        dry-run so the lowered HLO carries true int8/int4 FLOP and byte
+        counts, and by jit'd serving without interpret-mode scaffolding.
+        Semantics match :meth:`apply` exactly."""
+        raise NotImplementedError
+
+    def to_float(self, state: QuantLinearState) -> jax.Array:
+        """Dequantized ``[K, N]`` f32 weight (absorbed-decode support)."""
+        raise NotImplementedError
+
+    def abstract_state(self, k: int, n: int) -> QuantLinearState:
+        """ShapeDtypeStruct twin of ``encode`` output for a ``[k, n]`` weight."""
+        raise NotImplementedError
+
+    def data_axes(self, k_ax, n_ax) -> tuple:
+        """Logical sharding axes of the payload, aligned to its shape."""
+        raise NotImplementedError
+
+    def scale_axes(self, n_ax) -> tuple:
+        return (None, n_ax)
+
+    # -- derived (generic) ----------------------------------------------
+    def resident_bytes(self, state: QuantLinearState) -> int:
+        """HBM bytes of the resident weight — the roofline 'memory term'.
+
+        Computed from the payload itself, so real states and abstract
+        (dry-run) states account identically by construction.
+        """
+        return _nbytes(state.data) + _nbytes(state.scale)
+
+    def qbytes(self, k: int = _REF_K, n: int = _REF_N) -> float:
+        """Resident payload bytes per logical weight element (dry-run
+        analytic-traffic input; derives from :meth:`abstract_state`, so it
+        cannot drift from real residency).  Pass a concrete ``(k, n)`` to
+        account padding exactly for one layer."""
+        st = self.abstract_state(k, n)
+        return _nbytes(st.data) / float(k * n)
+
+    def partition_spec(self, k_ax, n_ax, rules):
+        """PartitionSpec of the payload under a logical→mesh rule table."""
+        from repro.sharding import partitioning as P
+
+        return P.spec_for(self.data_axes(k_ax, n_ax), rules)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<ResidencyFormat {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ResidencyFormat] = {}
+
+
+def register_format(fmt: ResidencyFormat) -> ResidencyFormat:
+    """Register ``fmt`` under ``fmt.name`` (last registration wins)."""
+    if not fmt.name:
+        raise ValueError("format must set a non-empty .name")
+    _REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+def get_format(name: str) -> ResidencyFormat:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown residency format {name!r}; registered: {formats()}"
+        ) from None
+
+
+def formats() -> tuple[str, ...]:
+    """Registered format names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# The six seed formats
+# ---------------------------------------------------------------------------
+
+
+class BF16Format(ResidencyFormat):
+    """Plain bf16 matmul — the unquantized reference residency.
+
+    ``keeps_float_params``: conversion leaves parameters as plain float
+    arrays (``encode`` still exists for direct ``from_float`` callers such
+    as the benchmarks' resident-bytes ladder).
+    """
+
+    name = "bf16"
+    keeps_float_params = True
+
+    def encode(self, w):
+        k, n = w.shape
+        return QuantLinearState(
+            data=w.astype(jnp.bfloat16), scale=jnp.ones((1, n), jnp.float32),
+            mode=self.name, k=k, n=n,
+        )
+
+    def apply(self, state, x, *, batch=None, interpret=None):
+        del batch, interpret
+        return jnp.dot(x.astype(jnp.bfloat16), state.data).astype(jnp.float32)
+
+    def apply_jnp(self, state, x):
+        return jnp.einsum("...k,kn->...n", x, state.data.astype(x.dtype))
+
+    def to_float(self, state):
+        return state.data.astype(jnp.float32)
+
+    def abstract_state(self, k, n):
+        return QuantLinearState(
+            data=jax.ShapeDtypeStruct((k, n), jnp.bfloat16),
+            scale=jax.ShapeDtypeStruct((1, n), jnp.float32),
+            mode=self.name, k=k, n=n,
+        )
+
+    def data_axes(self, k_ax, n_ax):
+        return (k_ax, n_ax)
+
+
+class Int8Format(ResidencyFormat):
+    """int8 weights + per-channel scale; shared by w8a16 and w8a8.
+
+    ``act_bits=None`` keeps activations float (fused-dequant kernel, w8a16);
+    ``act_bits=8`` quantizes activations per-token and runs the int8×int8
+    MXU kernel — the NI path of §III-B (w8a8).
+    """
+
+    def __init__(self, name: str, act_bits: Optional[int]):
+        self.name = name
+        self.act_bits = act_bits
+
+    def encode(self, w):
+        k, n = w.shape
+        qt = quant.quantize_weights(w, bits=8)
+        return QuantLinearState(
+            data=qt.data, scale=qt.scale.reshape(1, n), mode=self.name, k=k, n=n
+        )
+
+    def _as_qt(self, state):
+        return quant.QuantTensor(data=state.data, scale=state.scale, bits=8, axis=0)
+
+    def apply(self, state, x, *, batch=None, interpret=None):
+        del batch
+        from repro.kernels import ops
+
+        if self.act_bits is None:
+            return ops.weight_only_matmul(
+                x.astype(jnp.float32), self._as_qt(state), interpret=interpret
+            )
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=self.act_bits)
+        return ops.quant_matmul(xq, self._as_qt(state), interpret=interpret)
+
+    def apply_jnp(self, state, x):
+        if self.act_bits is None:
+            w = state.data.astype(x.dtype) * state.scale.astype(x.dtype)
+            return jnp.einsum("...k,kn->...n", x, w)
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=self.act_bits)
+        acc = jax.lax.dot_general(
+            xq.data, state.data, (((xq.data.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
+
+    def to_float(self, state):
+        return state.data.astype(jnp.float32) * state.scale
+
+    def abstract_state(self, k, n):
+        return QuantLinearState(
+            data=jax.ShapeDtypeStruct((k, n), jnp.int8),
+            scale=jax.ShapeDtypeStruct((1, n), jnp.float32),
+            mode=self.name, k=k, n=n,
+        )
+
+    def data_axes(self, k_ax, n_ax):
+        return (k_ax, n_ax)
+
+
+class PackedInt4Format(ResidencyFormat):
+    """w4a8: packed int4 weights (2/byte — half the HBM bytes), int8 acts,
+    in-kernel unpack (``gemv_int4``)."""
+
+    name = "w4a8"
+
+    def encode(self, w):
+        k, n = w.shape
+        qt = quant.quantize_weights(w, bits=4)
+        kp = k + (k % 2)
+        q = jnp.pad(qt.data, ((0, kp - k), (0, 0)))
+        return QuantLinearState(
+            data=quant.pack_int4(q, axis=0), scale=qt.scale.reshape(1, n),
+            mode=self.name, k=k, n=n,
+        )
+
+    def apply(self, state, x, *, batch=None, interpret=None):
+        del batch
+        from repro.kernels import ops
+
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=8)
+        return ops.quant_matmul_int4(
+            xq, state.data, state.scale, interpret=interpret
+        )
+
+    def apply_jnp(self, state, x):
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=8)
+        w = quant.unpack_int4(state.data, axis=0)
+        acc = jax.lax.dot_general(
+            xq.data, w, (((xq.data.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
+
+    def to_float(self, state):
+        w = quant.unpack_int4(state.data, axis=0)[: state.k]
+        return w.astype(jnp.float32) * state.scale
+
+    def abstract_state(self, k, n):
+        return QuantLinearState(
+            data=jax.ShapeDtypeStruct((-(-k // 2), n), jnp.int8),
+            scale=jax.ShapeDtypeStruct((1, n), jnp.float32),
+            mode=self.name, k=k, n=n,
+        )
+
+    def data_axes(self, k_ax, n_ax):
+        return (k_ax, n_ax)
+
+
+class BitPlaneFormat(ResidencyFormat):
+    """Bit-plane int4 weights + int4 acts — the paper's §IV BSDP layout.
+
+    Payload is ``[N, 4, ceil(K/32)]`` uint32 planes, output-channel-major so
+    a TP shard of the N axis owns contiguous planes (``data_axes`` shards
+    only N — the "block of rows per DPU" rule).  The kernel policy is the
+    only difference between the two registered instances: ``w4a4_bsdp``
+    keeps the faithful popcount kernel at every batch size, ``bsdp``
+    dispatches M==1 → popcount GEMV / M>1 → plane-pair GEMM.
+    """
+
+    is_bitplane = True
+
+    def __init__(self, name: str, kernel_policy: KernelPolicy):
+        self.name = name
+        self.kernel_policy = kernel_policy
+
+    def encode(self, w):
+        k, n = w.shape
+        qt = quant.quantize_weights(w, bits=4)
+        q = bitplane.pad_to_word(qt.data, axis=0)
+        planes = bitplane.encode_weights(q)
+        return QuantLinearState(
+            data=planes, scale=qt.scale.reshape(1, n), mode=self.name, k=k, n=n
+        )
+
+    def apply(self, state, x, *, batch=None, interpret=None):
+        from repro.kernels import ops
+
+        m = x.shape[0] if batch is None else batch
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=4)
+        acc = ops.bsdp_matmul(
+            xq.data, state.data, signed=True, interpret=interpret,
+            kernel=self.kernel_policy.kernel_for(m),
+        )
+        return acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
+
+    def apply_jnp(self, state, x):
+        from repro.core import bsdp
+
+        xq = quant.quantize_acts(x.astype(jnp.float32), bits=4)
+        lead = xq.data.shape[:-1]
+        x2 = xq.data.reshape(-1, xq.data.shape[-1])
+        xp = bitplane.encode_acts(bitplane.pad_to_word(x2))
+        acc = bsdp.bsdp_matmul_planes(xp, state.data, signed=True)
+        out = acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
+        return out.reshape(*lead, state.n).astype(x.dtype)
+
+    def to_float(self, state):
+        w = bitplane.decode(state.data, signed=True).T[: state.k]  # [K, N]
+        return w.astype(jnp.float32) * state.scale
+
+    def abstract_state(self, k, n):
+        kw = -(-k // 32)
+        return QuantLinearState(
+            data=jax.ShapeDtypeStruct((n, 4, kw), jnp.uint32),
+            scale=jax.ShapeDtypeStruct((1, n), jnp.float32),
+            mode=self.name, k=k, n=n,
+        )
+
+    def data_axes(self, k_ax, n_ax):
+        del k_ax  # K lives inside the packed plane words — never sharded
+        return (n_ax, None, None)
+
+
+register_format(BF16Format())
+register_format(Int8Format("w8a16", act_bits=None))
+register_format(Int8Format("w8a8", act_bits=8))
+register_format(PackedInt4Format())
+register_format(BitPlaneFormat("w4a4_bsdp", KernelPolicy(gemv="gemv", gemm="gemv")))
+register_format(BitPlaneFormat("bsdp", KernelPolicy(gemv="gemv", gemm="gemm")))
+
+
+# ---------------------------------------------------------------------------
+# Module-level entry points (single source of semantics)
+# ---------------------------------------------------------------------------
+
+
+def from_float(w: jax.Array, mode: str = "w8a8") -> QuantLinearState:
+    """One-time convert of a float ``[K, N]`` weight to residency ``mode``."""
+    return get_format(mode).encode(w)
+
+
+def apply(
+    state: QuantLinearState,
+    x: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``x [..., K] → [..., N]`` through the format's kernel. Returns f32."""
+    fmt = get_format(state.mode)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = fmt.apply(state, x2, batch=x2.shape[0], interpret=interpret)
+    return out.reshape(*lead, state.n)
+
+
+def resident_bytes(state: QuantLinearState) -> int:
+    """HBM bytes of the resident weight — the roofline 'memory term' input."""
+    return get_format(state.mode).resident_bytes(state)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer residency policy
+# ---------------------------------------------------------------------------
+
+
+def _pattern_matches(path: str, pat: str) -> bool:
+    """Glob-match ``pat`` against the dot-joined ``path``.
+
+    A pattern either matches the full path or a contiguous run of path
+    segments anywhere inside it, so ``"ffn"`` and ``"ffn.*"`` both select
+    ``stack.slot0.ffn.w_in``.
+    """
+    return (
+        fnmatch.fnmatchcase(path, pat)
+        or fnmatch.fnmatchcase(path, f"*.{pat}")
+        or fnmatch.fnmatchcase(path, f"{pat}.*")
+        or fnmatch.fnmatchcase(path, f"*.{pat}.*")
+    )
+
+
+SpecLike = Union["ResidencySpec", str, Mapping[str, str], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencySpec:
+    """Per-layer residency policy: ordered (glob pattern → format) rules
+    matched against dot-joined parameter paths, first match wins, falling
+    back to ``default``."""
+
+    default: str = "bf16"
+    rules: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        get_format(self.default)  # validate eagerly — typos fail at parse
+        for _, name in self.rules:
+            get_format(name)
+
+    @classmethod
+    def parse(cls, spec: SpecLike) -> "ResidencySpec":
+        """Accepts a ResidencySpec, a bare format name (uniform residency),
+        a ``"pat=fmt,...,default=fmt"`` CLI string, or a mapping."""
+        if spec is None:
+            return cls()
+        if isinstance(spec, ResidencySpec):
+            return spec
+        if isinstance(spec, Mapping):
+            default = spec.get("default", "bf16")
+            rules = tuple((p, f) for p, f in spec.items() if p != "default")
+            return cls(default=default, rules=rules)
+        if isinstance(spec, str):
+            if "=" not in spec:
+                return cls(default=spec)
+            default, rules = "bf16", []
+            for entry in spec.split(","):
+                entry = entry.strip()
+                if not entry:
+                    continue
+                pat, _, name = entry.partition("=")
+                if not name:
+                    raise ValueError(f"bad residency rule {entry!r}")
+                if pat == "default":
+                    default = name
+                else:
+                    rules.append((pat, name))
+            return cls(default=default, rules=tuple(rules))
+        raise TypeError(f"cannot parse residency spec from {type(spec)}")
+
+    def mode_for(self, path: str) -> str:
+        for pat, name in self.rules:
+            if _pattern_matches(path, pat):
+                return name
+        return self.default
+
+    def format_for(self, path: str) -> ResidencyFormat:
+        return get_format(self.mode_for(path))
+
+    def modes(self) -> tuple[str, ...]:
+        """Every format name this policy can select (default last)."""
+        seen = dict.fromkeys(name for _, name in self.rules)
+        seen[self.default] = None
+        return tuple(seen)
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(name == self.default for _, name in self.rules)
+
+    @property
+    def is_trivial(self) -> bool:
+        """Every selectable format keeps parameters as plain float arrays
+        (uniform bf16 today) — conversion is the identity."""
+        return all(get_format(m).keeps_float_params for m in self.modes())
+
+    def describe(self) -> str:
+        """Canonical CLI string round-trippable through :meth:`parse`."""
+        if self.is_uniform:
+            return self.default
+        parts = [f"{p}={n}" for p, n in self.rules]
+        return ",".join(parts + [f"default={self.default}"])

@@ -52,6 +52,7 @@ from jax.sharding import PartitionSpec
 
 from repro.configs import SHAPES, applicable_shapes, get_config
 from repro.configs.base import ModelConfig, ShapeCell
+from repro.core import residency
 from repro.launch import hlo_stats
 from repro.launch.mesh import (
     cost_analysis,
@@ -149,47 +150,63 @@ def opt_shardings(spec_tree, rules):
 # ---------------------------------------------------------------------------
 
 
-def abstract_quant(spec_tree, mode: str):
-    def walk(tree):
+def abstract_quant(spec_tree, spec, *, min_dim: int = 64):
+    """Residency-convert a ParamSpec tree WITHOUT materializing a weight.
+
+    ``spec`` is any :meth:`ResidencySpec.parse` form (format name, policy
+    dict, CLI string).  Mirrors :func:`repro.serve.engine.convert_params`
+    leaf for leaf — the same dot-joined paths are policy-matched, the same
+    ``min_dim`` floor leaves small projections float, and each selected
+    format's ``abstract_state``/``data_axes`` supply the payload shapes,
+    dtypes and sharding axes — so dry-run residency cannot drift from the
+    real one.
+    """
+    spec = residency.ResidencySpec.parse(spec)
+
+    def walk(tree, path):
         if not isinstance(tree, dict):
             return tree
         out = {}
         for key, sub in tree.items():
             if key in QUANTIZABLE_KEYS and P.is_spec(sub) and len(sub.shape) >= 2:
-                out[key] = _quant_leaf(sub, mode)
+                out[key] = _quant_leaf(
+                    sub, spec.mode_for(".".join(path + (key,))), min_dim
+                )
             else:
-                out[key] = walk(sub) if isinstance(sub, dict) else sub
+                out[key] = walk(sub, path + (key,)) if isinstance(sub, dict) else sub
         return out
 
-    return walk(spec_tree)
+    return walk(spec_tree, ())
 
 
-def _quant_leaf(spec, mode: str):
-    from repro.core.qlinear import QuantLinearState
+def _quant_leaf(spec, mode: str, min_dim: int):
+    fmt = residency.get_format(mode)
+    if fmt.keeps_float_params:  # convert_params leaves these as plain floats
+        return spec
+    if min(spec.shape[-2:]) < min_dim:  # convert_params min_dim floor
+        return spec
 
     *lead, k, n = spec.shape
     lead = tuple(lead)
     lead_axes = spec.axes[:-2]
     k_ax, n_ax = spec.axes[-2], spec.axes[-1]
-    if mode in ("w8a8", "w8a16"):
-        data = P.ParamSpec(lead + (k, n), jnp.int8, lead_axes + (k_ax, n_ax))
-    elif mode == "w4a8":
-        data = P.ParamSpec(lead + (k // 2, n), jnp.int8, lead_axes + (k_ax, n_ax))
-    elif mode in ("w4a4_bsdp", "bsdp"):
-        kw = -(-k // 32)
-        data = P.ParamSpec(
-            lead + (n, 4, kw), jnp.uint32, lead_axes + (n_ax, None, None)
-        )
-    else:
-        raise ValueError(mode)
-    scale = P.ParamSpec(lead + (1, n), jnp.float32, lead_axes + (None, n_ax))
-    return QuantLinearState(data=data, scale=scale, mode=mode, k=k, n=n)
+    st = fmt.abstract_state(k, n)
+    data = P.ParamSpec(
+        lead + tuple(st.data.shape), st.data.dtype,
+        lead_axes + tuple(fmt.data_axes(k_ax, n_ax)),
+    )
+    scale = P.ParamSpec(
+        lead + tuple(st.scale.shape), st.scale.dtype,
+        lead_axes + tuple(fmt.scale_axes(n_ax)),
+    )
+    return residency.QuantLinearState(data=data, scale=scale, mode=mode, k=k, n=n)
 
 
-def _serve_params(spec_tree, qmode: str, rules):
-    if qmode == "bf16":
+def _serve_params(spec_tree, qmode, rules, *, min_dim: int = 64):
+    spec = residency.ResidencySpec.parse(qmode)
+    if spec.is_trivial:
         return P.abstract(spec_tree), P.pspecs(spec_tree, rules)
-    qtree = abstract_quant(spec_tree, qmode)
+    qtree = abstract_quant(spec_tree, spec, min_dim=min_dim)
     abs_tree = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), qtree, is_leaf=P.is_spec
     )
@@ -245,13 +262,50 @@ def model_flops(cfg: ModelConfig, cell: ShapeCell, tp: int) -> float:
     return 2.0 * n * tokens
 
 
-_QBYTES = {"bf16": 2.0, "w8a16": 1.0, "w8a8": 1.0, "w4a8": 0.5,
-           "w4a4_bsdp": 0.5, "bsdp": 0.5}
+def _spec_nbytes(s) -> float:
+    n = 1
+    for d in s.shape:
+        n *= d
+    return n * jnp.dtype(s.dtype).itemsize
+
+
+def residency_qbytes(cfg: ModelConfig, tp: int, spec, *, min_dim: int = 64) -> float:
+    """Resident weight bytes per parameter element, derived from the format
+    registry (this replaces the old hand-maintained ``_QBYTES`` table).
+
+    Byte-counts the tree :func:`abstract_quant` produces — the SAME walk
+    that supplies the lowered serve-cell inputs, with the same policy
+    matching and ``min_dim`` floor as ``convert_params`` — so dry-run byte
+    accounting cannot drift from real residency: quantized leaves count
+    their abstract payload, leaves that stay float count their spec dtype.
+    """
+    spec_tree = model_lib.specs(cfg, tp)
+    qtree = abstract_quant(spec_tree, spec, min_dim=min_dim)
+    elems = qbytes_sum = 0.0
+
+    def walk(orig, conv):
+        nonlocal elems, qbytes_sum
+        for key, sub in orig.items():
+            csub = conv[key]
+            if key in QUANTIZABLE_KEYS and P.is_spec(sub) and len(sub.shape) >= 2:
+                n_el = 1
+                for d in sub.shape:
+                    n_el *= d
+                elems += n_el
+                if isinstance(csub, residency.QuantLinearState):
+                    qbytes_sum += _spec_nbytes(csub.data)  # payload, no scales
+                else:
+                    qbytes_sum += _spec_nbytes(csub)  # stayed float
+            elif isinstance(sub, dict):
+                walk(sub, csub)
+
+    walk(spec_tree, qtree)
+    return qbytes_sum / max(elems, 1.0)
 
 
 def analytic_traffic(
     cfg: ModelConfig, cell: ShapeCell, tp: int, mesh_axes: dict,
-    mb: int, qmode: str,
+    mb: int, qmode: str, min_dim: int = 64,
 ) -> dict:
     # (kv_quant halves the cache term via cfg.kv_quant in _cache_bytes_local)
     """Minimum HBM traffic model per device per step (fusion-ideal).
@@ -267,9 +321,13 @@ def analytic_traffic(
     """
     pc = param_counts(cfg, tp)
     dways = mesh_axes.get("pod", 1) * mesh_axes.get("data", 1)
-    wq = _QBYTES[qmode]
+    # train cells always stream bf16 weights; only serve cells pay for the
+    # registry walk that derives the policy's bytes/element
+    wq = 2.0 if cell.kind == "train" else residency_qbytes(
+        cfg, tp, qmode, min_dim=min_dim
+    )
     # TP-local resident weight bytes (what a fwd pass must read)
-    w_local = pc["total"] * (2.0 if cell.kind == "train" else wq) / tp
+    w_local = pc["total"] * wq / tp
     act_round = 8  # residual/norm/proj round-trips per layer boundary
     d = cfg.d_model
     L = cfg.n_layers + (cfg.n_enc_layers or 0)
@@ -349,12 +407,15 @@ def lower_cell(
     mesh_shape: Optional[tuple[int, int]] = None,
     kv_quant: bool = False,
     moe_impl: Optional[str] = None,
+    min_dim: int = 64,
 ) -> dict:
     """Lower one cell.  ``mesh_shape=(data, model)`` overrides the default
     16×16 factorization of the 256-chip pod — the §Perf lever for trading
     TP collective volume against FSDP gather volume at fixed chip count.
     ``kv_quant`` switches the decode caches to int8+scales (§Perf P1);
-    ``moe_impl`` selects the dispatch algorithm (§Perf P4)."""
+    ``moe_impl`` selects the dispatch algorithm (§Perf P4); ``min_dim`` is
+    the residency-conversion floor and must match the serving-side
+    ``convert_params``/``ServeEngine`` value for drift-free accounting."""
     cfg = get_config(arch)
     if kv_quant:
         cfg = dataclasses.replace(cfg, kv_quant=True)
@@ -408,7 +469,8 @@ def lower_cell(
             lowered = jitted.lower(params_abs, opt_abs, batch_abs)
             compiled = lowered.compile()
     elif cell.kind == "prefill":
-        params_abs, params_sh = _serve_params(spec_tree, qmode, rules)
+        params_abs, params_sh = _serve_params(spec_tree, qmode, rules,
+                                               min_dim=min_dim)
         batch_abs, batch_sh = batch_specs(cfg, cell, rules)
 
         def prefill_step(params, batch):
@@ -425,7 +487,8 @@ def lower_cell(
             lowered = jitted.lower(params_abs, batch_abs)
             compiled = lowered.compile()
     else:  # decode
-        params_abs, params_sh = _serve_params(spec_tree, qmode, rules)
+        params_abs, params_sh = _serve_params(spec_tree, qmode, rules,
+                                               min_dim=min_dim)
         b = cell.global_batch
         cache_len = cell.seq_len + DECODE_HORIZON
         cache_abs = jax.eval_shape(
@@ -500,7 +563,7 @@ def analyze_cell(
     arch: str, shape: str, *, multi_pod: bool = False, qmode: str = "bf16",
     microbatches: Optional[int] = None, skip_probes: bool = False,
     mesh_shape: Optional[tuple[int, int]] = None, kv_quant: bool = False,
-    moe_impl: Optional[str] = None,
+    moe_impl: Optional[str] = None, min_dim: int = 64,
 ) -> dict:
     cfg = get_config(arch)
     if kv_quant:
@@ -509,7 +572,8 @@ def analyze_cell(
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     cell = SHAPES[shape]
     kw = dict(multi_pod=multi_pod, qmode=qmode, microbatches=microbatches,
-              mesh_shape=mesh_shape, kv_quant=kv_quant, moe_impl=moe_impl)
+              mesh_shape=mesh_shape, kv_quant=kv_quant, moe_impl=moe_impl,
+              min_dim=min_dim)
     rec = lower_cell(arch, shape, **kw)
     rec["status"] = "ok"
     if skip_probes:
@@ -542,7 +606,7 @@ def analyze_cell(
     mf = model_flops(cfg, cell, tp)
     n_dev = rec["devices"]
     traffic = analytic_traffic(
-        cfg, cell, tp, rec["mesh_shape"], mb, qmode
+        cfg, cell, tp, rec["mesh_shape"], mb, qmode, min_dim=min_dim
     )
     terms = hlo_stats.roofline_terms(
         corrected["flops_per_device"],
@@ -579,14 +643,23 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
     ap.add_argument("--qmode", default="bf16",
-                    choices=["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp",
-                             "bsdp"])
+                    help="registered residency format name (one of "
+                         f"{', '.join(residency.formats())}) or a per-layer "
+                         "policy like 'ffn=bsdp,default=w8a8'")
     ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--min-dim", type=int, default=64,
+                    help="residency-conversion floor: quantizable leaves "
+                         "with min(K, N) below this stay float; MUST match "
+                         "the serving-side convert_params/ServeEngine value "
+                         "for drift-free byte accounting")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-probes", action="store_true",
                     help="lower+compile only (multi-pod pass/fail runs)")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
+    # validate + canonicalize the residency policy early (typos fail here,
+    # not per-cell); the canonical string threads through to record tags
+    args.qmode = residency.ResidencySpec.parse(args.qmode).describe()
 
     from repro.configs import ARCH_NAMES
 
@@ -610,6 +683,7 @@ def main():
                     arch, shape, multi_pod=mp, qmode=args.qmode,
                     microbatches=args.microbatches,
                     skip_probes=args.skip_probes or mp,
+                    min_dim=args.min_dim,
                 )
                 ok += 1
                 dom = rec.get("roofline", {}).get("dominant", "-")

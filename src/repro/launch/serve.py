@@ -1,12 +1,15 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Initializes (or restores) a model, converts weights to the requested
-quantized residency mode — the paper's one-time GEMV-V layout transform —
-and serves synthetic batched requests through the continuous-batching
-engine, reporting throughput.
+residency policy — the paper's one-time GEMV-V layout transform — and
+serves synthetic batched requests through the continuous-batching engine,
+reporting throughput.  ``--mode`` takes a registered format name (uniform
+residency) or a per-layer ResidencySpec string:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --mode w8a8 --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --mode 'ffn=bsdp,mixer=w8a16,default=w8a8'
 """
 
 from __future__ import annotations
@@ -19,6 +22,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.core import residency
 from repro.models import model as model_lib
 from repro.serve import engine
 from repro.sharding import partitioning as P
@@ -28,9 +32,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mode", default="w8a8",
-                    choices=["bf16", "w8a16", "w8a8", "w4a8", "w4a4_bsdp", "bsdp"])
+    ap.add_argument("--mode", default="w8a8", type=residency.ResidencySpec.parse,
+                    help="registered format name (one of "
+                         f"{', '.join(residency.formats())}) or a per-layer "
+                         "policy like 'ffn=bsdp,default=w8a8'")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--min-dim", type=int, default=64,
+                    help="residency-conversion floor (smaller projections "
+                         "stay float); the default matches ServeEngine and "
+                         "launch/dryrun.py --min-dim so dry-run byte "
+                         "accounting matches what is actually served — "
+                         "lower it (e.g. 16) for --smoke configs whose "
+                         "projections are tiny")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -51,8 +64,9 @@ def main():
         params = P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
 
     t0 = time.perf_counter()
-    qparams = engine.convert_params(params, cfg, args.mode, min_dim=16)
-    print(f"residency convert ({args.mode}): {time.perf_counter()-t0:.2f}s, "
+    qparams = engine.convert_params(params, cfg, args.mode, min_dim=args.min_dim)
+    print(f"residency convert ({args.mode.describe()}): "
+          f"{time.perf_counter()-t0:.2f}s, "
           f"{engine.resident_bytes(qparams)/1e6:.1f} MB resident")
 
     eng = engine.ServeEngine(

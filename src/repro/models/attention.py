@@ -500,25 +500,24 @@ def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
 
 
 def _as_float(w, shape3, dtype):
-    """Reshape a (possibly quantized) up-projection to [r, H, d] float."""
-    from repro.core import qlinear as _ql
+    """Reshape a (possibly quantized) up-projection to [r, H, d] float.
 
-    if isinstance(w, _ql.QuantLinearState):
-        if w.mode in ("w8a16", "w8a8"):
-            mat = w.data.astype(jnp.float32) * w.scale
-        elif w.mode == "bf16":
-            mat = w.data.astype(jnp.float32)
-        else:  # packed formats: decode via the jnp reference path
-            from repro.core import quant as _q
+    Capability-gated on the residency registry: a format that cannot be
+    dequantized to a dense matrix declares ``supports_absorbed_decode =
+    False`` and fails loudly here instead of silently falling through to a
+    wrong decode path.
+    """
+    from repro.core import residency
 
-            if w.mode == "w4a8":
-                mat = _q.unpack_int4(w.data, axis=0).astype(jnp.float32) * w.scale
-            else:
-                from repro.kernels import ref as _ref
-
-                mat = _ref.decode_weights_ref(w.data).astype(jnp.float32) * w.scale
-            mat = mat[: w.k]
-        return mat.reshape(shape3).astype(dtype)
+    if isinstance(w, residency.QuantLinearState):
+        fmt = residency.get_format(w.mode)
+        if not fmt.supports_absorbed_decode:
+            raise NotImplementedError(
+                f"residency format {w.mode!r} does not support absorbed MLA "
+                "decode (supports_absorbed_decode=False); keep the latent "
+                "up-projections in a dequantizable format via ResidencySpec"
+            )
+        return fmt.to_float(w).reshape(shape3).astype(dtype)
     return w.reshape(shape3).astype(dtype)
 
 

@@ -18,58 +18,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import qlinear
+from repro.core import qlinear, residency
 from repro.sharding.partitioning import ParamSpec
 
 
 def dense(w, x: jax.Array, impl: Optional[str] = None) -> jax.Array:
-    """``x [..., K] @ w [K, N]`` — float path or quantized-residency path."""
+    """``x [..., K] @ w [K, N]`` — float path or quantized-residency path.
+
+    Residency semantics live entirely in the format registry
+    (:mod:`repro.core.residency`): ``impl="jnp"`` selects the format's
+    pure-jnp path (dry-run lowering / jit'd serving), anything else the
+    Pallas kernel path.  No per-mode dispatch happens here.
+    """
     if isinstance(w, qlinear.QuantLinearState):
-        interpret = None if impl != "jnp" else None
         if impl == "jnp":
-            return _qlinear_jnp(w, x)
-        return qlinear.apply(w, x, interpret=interpret).astype(x.dtype)
+            return residency.get_format(w.mode).apply_jnp(w, x)
+        return residency.apply(w, x).astype(x.dtype)
     return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
-
-
-def _qlinear_jnp(state: qlinear.QuantLinearState, x: jax.Array) -> jax.Array:
-    """jnp (non-Pallas) quantized path — used by the dry-run so the lowered
-    HLO carries the true int8/int4 FLOP and byte counts without interpret-
-    mode scaffolding.  Semantics match qlinear.apply exactly."""
-    from repro.core import bsdp, quant
-
-    mode = state.mode
-    if mode == "bf16":
-        return jnp.einsum("...k,kn->...n", x, state.data.astype(x.dtype))
-    if mode == "w8a16":
-        w = state.data.astype(x.dtype) * state.scale.astype(x.dtype)
-        return jnp.einsum("...k,kn->...n", x, w)
-    if mode == "w8a8":
-        xq = quant.quantize_acts(x.astype(jnp.float32), bits=8)
-        acc = jax.lax.dot_general(
-            xq.data, state.data, (((xq.data.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
-    if mode == "w4a8":
-        xq = quant.quantize_acts(x.astype(jnp.float32), bits=8)
-        w = quant.unpack_int4(state.data, axis=0)
-        acc = jax.lax.dot_general(
-            xq.data, w, (((xq.data.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        return (acc.astype(jnp.float32) * xq.scale * state.scale).astype(x.dtype)
-    if mode in qlinear.BSDP_MODES:
-        from repro.core import bitplane
-
-        xq = quant.quantize_acts(x.astype(jnp.float32), bits=4)
-        lead = xq.data.shape[:-1]
-        x2 = xq.data.reshape(-1, xq.data.shape[-1])
-        xp = bitplane.encode_acts(bitplane.pad_to_word(x2))
-        acc = bsdp.bsdp_matmul_planes(xp, state.data, signed=True)
-        out = acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
-        return out.reshape(*lead, state.n).astype(x.dtype)
-    raise ValueError(mode)
 
 
 # ---------------------------------------------------------------------------

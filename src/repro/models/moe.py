@@ -77,7 +77,7 @@ def _expert_ffn(params, h, cfg, impl=None):
             z = jax.nn.silu(g) * u
         return dense(wo, z, impl=impl)
 
-    if isinstance(w_in, jnp.ndarray):
+    if isinstance(w_in, jnp.ndarray) and isinstance(w_out, jnp.ndarray):
         z = jnp.einsum("ecd,edf->ecf", h, w_in.astype(h.dtype))
         if cfg.act == "gelu":
             z = jax.nn.gelu(z)
@@ -85,7 +85,10 @@ def _expert_ffn(params, h, cfg, impl=None):
             g, u = jnp.split(z, 2, axis=-1)
             z = jax.nn.silu(g) * u
         return jnp.einsum("ecf,efd->ecd", z, w_out.astype(h.dtype))
-    # quantized residency: vmap the quantized kernel over experts
+    # quantized residency: vmap ``dense`` over the expert axis.  Each of
+    # w_in/w_out may independently be a QuantLinearState (mixed per-layer
+    # ResidencySpec policies) or a plain float stack — dense() dispatches
+    # per leaf through the format registry inside the vmap.
     return jax.vmap(one)(h, w_in, w_out)
 
 

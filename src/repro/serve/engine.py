@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import qlinear
+from repro.core import qlinear, residency
 from repro.models import model as model_lib
 
 # Parameter-tree paths (leaf dict keys) eligible for quantized residency.
@@ -34,46 +34,54 @@ QUANTIZABLE_KEYS = (
 )
 
 
-def convert_params(params, cfg, mode: str, *, min_dim: int = 64):
+def convert_params(params, cfg, spec, *, min_dim: int = 64):
     """One-time residency conversion (the amortized layout transform).
 
-    Walks the parameter tree; 2-D float leaves under quantizable keys (and
-    3-D stacked/expert variants, handled per-slice) become
-    :class:`QuantLinearState`.  Norms, biases, embeddings, SSM dynamics
-    stay float.
+    ``spec`` is anything :meth:`repro.core.residency.ResidencySpec.parse`
+    accepts: a bare format name (uniform residency), a per-layer policy map
+    (``{"ffn": "bsdp", "mixer": "w8a16", "default": "w8a8"}``), a CLI string
+    (``"ffn=bsdp,default=w8a8"``) or a ResidencySpec.  The tree is walked
+    with dot-joined paths; 2-D float leaves under quantizable keys (and 3-D
+    stacked/expert variants, handled per-slice) become the
+    :class:`QuantLinearState` of whichever format the policy selects for
+    their path.  Norms, biases, embeddings, SSM dynamics — and leaves the
+    policy maps to ``bf16`` — stay float.
     """
-    if mode == "bf16":
+    spec = residency.ResidencySpec.parse(spec)
+    if spec.is_trivial:
         return params
 
-    def walk(tree):
+    def walk(tree, path):
         if isinstance(tree, dict):
             return {
-                k: _convert_leaf(v, cfg, mode, min_dim)
+                k: _convert_leaf(v, spec.mode_for(".".join(path + (k,))), min_dim)
                 if k in QUANTIZABLE_KEYS
-                else walk(v)
+                else walk(v, path + (k,))
                 for k, v in tree.items()
             }
         return tree
 
-    return walk(params)
+    return walk(params, ())
 
 
-def _convert_leaf(w, cfg, mode, min_dim):
+def _convert_leaf(w, mode, min_dim):
+    if residency.get_format(mode).keeps_float_params:
+        return w
     if not isinstance(w, jnp.ndarray) or w.ndim < 2:
         return w
     if w.ndim == 2:
         if min(w.shape) < min_dim:
             return w
-        return qlinear.from_float(w.astype(jnp.float32), mode)
+        return residency.from_float(w.astype(jnp.float32), mode)
     # stacked [L, K, N] (scan) or [E, K, N] (experts) or [L, E, K, N]
     lead = w.shape[:-2]
     flat = w.reshape(-1, *w.shape[-2:])
     if min(w.shape[-2:]) < min_dim:
         return w
-    states = [qlinear.from_float(flat[i].astype(jnp.float32), mode) for i in range(flat.shape[0])]
+    states = [residency.from_float(flat[i].astype(jnp.float32), mode) for i in range(flat.shape[0])]
     data = jnp.stack([s.data for s in states]).reshape(*lead, *states[0].data.shape)
     scale = jnp.stack([s.scale for s in states]).reshape(*lead, *states[0].scale.shape)
-    return qlinear.QuantLinearState(
+    return residency.QuantLinearState(
         data=data, scale=scale, mode=mode, k=states[0].k, n=states[0].n
     )
 
@@ -103,14 +111,17 @@ class Request:
 class ServeEngine:
     """Greedy batched decoder over a fixed slot count (continuous batching).
 
-    ``mode`` selects the weight-residency mode (see
-    :data:`repro.core.qlinear.MODES`): parameters are converted ONCE at
-    engine construction — the paper's amortized layout transform — and every
-    prefill and multi-slot decode step thereafter runs through that mode's
-    kernels.  ``mode="bsdp"`` serves the whole continuous-batching traffic
-    through bit-plane weights: batched prefill ([P, K] activations) and
-    multi-slot decode ([slots, K]) both route to the plane-pair GEMM kernel,
-    single-token traffic to the popcount GEMV kernel.
+    ``mode`` selects the weight-residency policy — a registered format name
+    for uniform residency, or any per-layer :class:`repro.core.residency.
+    ResidencySpec` form (policy dict / ``"pat=fmt,..."`` string).
+    Parameters are converted ONCE at engine construction — the paper's
+    amortized layout transform — and every prefill and multi-slot decode
+    step thereafter runs through each layer's format.  ``mode="bsdp"``
+    serves the whole continuous-batching traffic through bit-plane weights
+    (the format's KernelPolicy routes batched prefill and multi-slot decode
+    to the plane-pair GEMM kernel, single-token traffic to the popcount
+    GEMV kernel); a mixed policy like ``{"ffn": "bsdp", "mixer": "w8a16"}``
+    keeps BSDP for the giant FFN GEMVs and w8a16 elsewhere.
     """
 
     def __init__(
@@ -123,15 +134,17 @@ class ServeEngine:
         max_len: int = 256,
         rules=None,
         impl: Optional[str] = "jnp",
-        mode: str = "bf16",
+        mode: residency.SpecLike = "bf16",
         min_dim: int = 64,
         trace_logits: bool = False,
     ):
-        if mode != "bf16":
-            params = convert_params(params, cfg, mode, min_dim=min_dim)
+        spec = residency.ResidencySpec.parse(mode)
+        if not spec.is_trivial:
+            params = convert_params(params, cfg, spec, min_dim=min_dim)
         self.params, self.cfg, self.tp = params, cfg, tp
         self.slots, self.max_len, self.rules, self.impl = slots, max_len, rules, impl
-        self.mode = mode
+        self.spec = spec
+        self.mode = spec.describe()
         self.trace_logits = trace_logits
         #: when ``trace_logits``: [(kind, slots, np.ndarray logits)] in
         #: execution order — ("prefill", (slot,), [vocab]) and

@@ -49,6 +49,14 @@ class TestBenchSmoke:
         assert "dispatch=gemv" in smoke_output  # M==1 routed to GEMV kernel
         assert "dispatch=gemm" in smoke_output  # M>1 routed to GEMM kernel
 
+    def test_mixed_residency_row_present(self, smoke_output):
+        """The per-layer ResidencySpec policy path stays benchmarked."""
+        line = next(
+            l for l in smoke_output.splitlines()
+            if l.startswith("gemv_e2e/mixed_residency")
+        )
+        assert "spec=ffn=bsdp" in line and "resident_mb=" in line
+
     def test_rows_are_csv_shaped(self, smoke_output):
         lines = [l for l in smoke_output.splitlines() if "/" in l and "," in l]
         assert lines, "no CSV rows at all"
