@@ -6,10 +6,13 @@ Serves a small causal LM with BATCHED, continuously-scheduled requests
 through :class:`repro.serve.engine.ServeEngine` under every registered
 weight-residency format — plus a mixed per-layer ResidencySpec policy
 (BSDP for the FFN GEMVs, w8a16 attention, w8a8 default) — and reports
-per-mode throughput, resident weight bytes, and greedy-output agreement
-vs the bf16 reference: the serving analogue of the paper's Fig. 9/13
-ladder.  ``--modes`` accepts format names or policy strings like
-``ffn=bsdp,default=w8a8``.
+per-mode throughput, resident weight bytes, cache bytes, and greedy-output
+agreement vs the bf16 reference: the serving analogue of the paper's
+Fig. 9/13 ladder.  ``--modes`` accepts format names or policy strings like
+``ffn=bsdp,default=w8a8``, optionally suffixed with a decode-cache format
+(``repro.core.kvcache.FORMATS``) as ``+kv:int4_bp`` — the last default row
+serves BSDP FFN weights against a bit-plane K/V cache, both dominant
+resident payloads quantized by their registries.
 """
 
 import argparse
@@ -19,12 +22,13 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import residency
+from repro.core import kvcache, residency
 from repro.models import model as model_lib
 from repro.serve import engine
 from repro.sharding import partitioning as P
 
-MODES = list(residency.formats()) + ["ffn=bsdp,mixer=w8a16,default=w8a8"]
+MIXED = "ffn=bsdp,mixer=w8a16,default=w8a8"
+MODES = list(residency.formats()) + [MIXED, MIXED + "+kv:int4_bp"]
 
 
 def main():
@@ -43,11 +47,15 @@ def main():
     ]
 
     reference = None
-    print(f"{'mode':<34} {'tok/s':>8} {'resident MB':>12} {'agree@1':>8}")
-    for mode in args.modes:
+    print(f"{'mode':<44} {'tok/s':>8} {'resident MB':>12} {'cache MB':>9} "
+          f"{'agree@1':>8}")
+    for entry in args.modes:
+        # "mode" or "mode+kv:cache_format" — weight × cache residency
+        mode, _, cache_fmt = entry.partition("+kv:")
         # residency conversion happens once, inside the engine (amortized)
         eng = engine.ServeEngine(
-            params, cfg, slots=3, max_len=64, mode=mode, min_dim=16
+            params, cfg, slots=3, max_len=64, mode=mode,
+            cache_format=cache_fmt or None, min_dim=16,
         )
         reqs = [eng.submit(p, args.max_new) for p in prompts]
         t0 = time.perf_counter()
@@ -64,7 +72,10 @@ def main():
             )
             agree = hits / max(sum(len(r) for r in reference), 1)
         mb = engine.resident_bytes(eng.params) / 1e6
-        print(f"{eng.mode:<34} {toks/dt:8.1f} {mb:12.2f} {agree:8.2f}")
+        cache_mb = kvcache.cache_resident_bytes(eng.caches) / 1e6
+        label = eng.mode + (f"+kv:{eng.cache_format}" if cache_fmt else "")
+        print(f"{label:<44} {toks/dt:8.1f} {mb:12.2f} {cache_mb:9.3f} "
+              f"{agree:8.2f}")
     print("serve_quantized OK")
 
 

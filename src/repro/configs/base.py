@@ -75,8 +75,13 @@ class ModelConfig:
     tie_embeddings: bool = False
     dtype: Any = jnp.bfloat16
     # int8 KV/latent cache (per-slot scales; §Perf P1 — halves decode cache
-    # traffic AND capacity; dequant folded after the integer contraction)
+    # traffic AND capacity; dequant folded after the integer contraction).
+    # Legacy boolean: equivalent to cache_format="int8".
     kv_quant: bool = False
+    # Decode-cache residency format: a name registered in
+    # repro.core.kvcache.FORMATS ("bf16" | "int8" | "int4_bp" | ...).
+    # None resolves via kv_quant for backward compatibility.
+    cache_format: Optional[str] = None
 
     # --- scan layout ---
     block_period: int = 1  # layers per scanned superblock

@@ -25,19 +25,18 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PLANE_BITS = 4  # int4 / uint4
 WORD = 32  # elements per packed uint32 word
 
-_POW2 = None  # lazily-built (1 << arange(32)) uint32 constant
+# host-side (1 << arange(32)) uint32 constant: a numpy array, NOT a cached
+# jnp array — caching a traced jnp constant leaks tracers when the first
+# encode happens inside a lax.scan body (e.g. bit-plane cache writes)
+_POW2 = (np.uint32(1) << np.arange(WORD, dtype=np.uint32)).astype(np.uint32)
 
 
 def _pow2() -> jax.Array:
-    global _POW2
-    if _POW2 is None:
-        _POW2 = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)).astype(
-            jnp.uint32
-        )
     return _POW2
 
 

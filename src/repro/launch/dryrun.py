@@ -52,7 +52,7 @@ from jax.sharding import PartitionSpec
 
 from repro.configs import SHAPES, applicable_shapes, get_config
 from repro.configs.base import ModelConfig, ShapeCell
-from repro.core import residency
+from repro.core import kvcache, residency
 from repro.launch import hlo_stats
 from repro.launch.mesh import (
     cost_analysis,
@@ -98,43 +98,13 @@ def batch_specs(cfg: ModelConfig, cell: ShapeCell, rules, batch_override=None):
     return abs_, sh
 
 
-_CACHE_AXES = {
-    "k": (None, "batch", "kv_seq", "kv_heads_cache", None),
-    "v": (None, "batch", "kv_seq", "kv_heads_cache", None),
-    "k_scale": (None, "batch", "kv_seq", "kv_heads_cache"),
-    "v_scale": (None, "batch", "kv_seq", "kv_heads_cache"),
-    "c_scale": (None, "batch", "kv_seq"),
-    "ck": (None, "batch", None, "kv_heads_cache", None),
-    "cv": (None, "batch", None, "kv_heads_cache", None),
-    "pos_ids": (None, "batch", "kv_seq"),
-    "c_kv": (None, "batch", "kv_seq", None),
-    "k_rope": (None, "batch", "kv_seq", None),
-    "conv": (None, "batch", None, "act_mlp"),
-    "ssm": (None, "batch", "act_mlp", None),
-}
-
-
-def cache_pspecs(cache_abs, rules, shard_kv: bool):
-    local_rules = dict(rules)
-    local_rules["kv_heads_cache"] = rules["kv_heads"] if shard_kv else None
-
-    def leaf_spec(path, leaf):
-        name, in_stack = None, False
-        for p in path:
-            key = getattr(p, "key", None)
-            if key == "stack":
-                in_stack = True
-            if key in _CACHE_AXES:
-                name = key
-        if name is None:
-            return PartitionSpec()
-        axes = _CACHE_AXES[name]
-        if not in_stack:
-            axes = axes[1:]
-        axes = axes[: leaf.ndim]
-        return P.spec_for(tuple(axes), local_rules)
-
-    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abs)
+def cache_pspecs(cache_abs, rules, shard_kv: bool, cfg=None):
+    """Cache PartitionSpecs — registry-derived, lives in
+    :func:`repro.sharding.partitioning.cache_pspecs` (the K/V payload and
+    scale axes come from the cache format's ``data_axes``, e.g. the
+    ``int4_bp`` plane dims stay unsharded while kv-heads shard on the
+    model axis)."""
+    return P.cache_pspecs(cache_abs, rules, shard_kv, cfg)
 
 
 def opt_shardings(spec_tree, rules):
@@ -263,10 +233,8 @@ def model_flops(cfg: ModelConfig, cell: ShapeCell, tp: int) -> float:
 
 
 def _spec_nbytes(s) -> float:
-    n = 1
-    for d in s.shape:
-        n *= d
-    return n * jnp.dtype(s.dtype).itemsize
+    # shared shape×itemsize counter (works on ParamSpecs/SDS alike)
+    return residency._nbytes(s)
 
 
 def residency_qbytes(cfg: ModelConfig, tp: int, spec, *, min_dim: int = 64) -> float:
@@ -307,7 +275,8 @@ def analytic_traffic(
     cfg: ModelConfig, cell: ShapeCell, tp: int, mesh_axes: dict,
     mb: int, qmode: str, min_dim: int = 64,
 ) -> dict:
-    # (kv_quant halves the cache term via cfg.kv_quant in _cache_bytes_local)
+    # (the cache term derives from cfg's registered cache format in
+    # _cache_bytes_local — int8 halves it, int4_bp quarters it)
     """Minimum HBM traffic model per device per step (fusion-ideal).
 
     The HLO 'bytes accessed' metric charges every producer/consumer edge as
@@ -360,21 +329,26 @@ def analytic_traffic(
 
 
 def _cache_bytes_local(cfg, cell, tp, mesh_axes) -> float:
+    """Per-device decode-cache bytes, derived from the cache-format
+    registry: each channel's per-slot bytes come from the format's
+    ``abstract_state`` (via ``slot_bytes``) — the cache analogue of
+    :func:`residency_qbytes`, drift-killed by construction."""
     dways = mesh_axes.get("pod", 1) * mesh_axes.get("data", 1)
     s = cell.seq_len
     b = cell.global_batch
-    kv_bytes = 1 if cfg.kv_quant else 2  # int8 cache (SPerf P1) vs bf16
+    fmt = kvcache.format_for(cfg)
     per_layer = 0.0
     for i in range(cfg.n_layers):
         kind = cfg.mixer_kind(i)
         if kind in ("attn", "attn_cross"):
             if cfg.attn_type == "mla":
                 per_layer += s * (
-                    cfg.kv_lora_rank * kv_bytes + cfg.qk_rope_dim * 2
+                    fmt.slot_bytes((), cfg.kv_lora_rank)
+                    + cfg.qk_rope_dim * 2  # rope key stays bf16
                 )
             else:
                 _, kvp, shard_kv = attn_dims(cfg, tp)
-                width = kvp * cfg.d_head * 2 * kv_bytes  # k+v
+                width = fmt.slot_bytes((kvp,), cfg.d_head) * 2  # k+v
                 per_layer += min(s, cfg.sliding_window or s) * (
                     width / (tp if shard_kv else 1)
                 )
@@ -406,19 +380,26 @@ def lower_cell(
     print_analyses: bool = False,
     mesh_shape: Optional[tuple[int, int]] = None,
     kv_quant: bool = False,
+    cache_format: Optional[str] = None,
     moe_impl: Optional[str] = None,
     min_dim: int = 64,
 ) -> dict:
     """Lower one cell.  ``mesh_shape=(data, model)`` overrides the default
     16×16 factorization of the 256-chip pod — the §Perf lever for trading
     TP collective volume against FSDP gather volume at fixed chip count.
-    ``kv_quant`` switches the decode caches to int8+scales (§Perf P1);
-    ``moe_impl`` selects the dispatch algorithm (§Perf P4); ``min_dim`` is
-    the residency-conversion floor and must match the serving-side
+    ``cache_format`` selects the decode-cache residency (a name registered
+    in ``repro.core.kvcache.FORMATS``; ``kv_quant`` is the legacy boolean
+    for ``"int8"``).  The lowered cache inputs AND the analytic cache-byte
+    term both derive from the format's ``abstract_state``, so dry-run cache
+    accounting equals real cache residency by construction.  ``moe_impl``
+    selects the dispatch algorithm (§Perf P4); ``min_dim`` is the
+    residency-conversion floor and must match the serving-side
     ``convert_params``/``ServeEngine`` value for drift-free accounting."""
     cfg = get_config(arch)
     if kv_quant:
         cfg = dataclasses.replace(cfg, kv_quant=True)
+    if cache_format is not None:
+        cfg = dataclasses.replace(cfg, cache_format=cache_format)
     if moe_impl:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     cell = SHAPES[shape]
@@ -495,7 +476,7 @@ def lower_cell(
             lambda: model_lib.init_cache(cfg, b, cache_len, tp=tp)
         )
         _, _, shard_kv = attn_dims(cfg, tp)
-        cache_sh = cache_pspecs(cache_abs, rules, shard_kv)
+        cache_sh = cache_pspecs(cache_abs, rules, shard_kv, cfg)
         tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
         pos_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
         tok_sh = P.spec_for(("batch", None), rules)
@@ -523,7 +504,8 @@ def lower_cell(
                if k in ("flops", "bytes accessed")})
     return _collect(
         compiled, mesh=mesh, arch=arch, shape=shape, multi_pod=multi_pod,
-        qmode=qmode, plan_notes=pl.notes, microbatches=mb_used if is_probe else mb,
+        qmode=qmode, cache_format=kvcache.format_for(cfg).name,
+        plan_notes=pl.notes, microbatches=mb_used if is_probe else mb,
         lower_seconds=lower_s, kind=cell.kind, probe=probe,
     )
 
@@ -563,16 +545,20 @@ def analyze_cell(
     arch: str, shape: str, *, multi_pod: bool = False, qmode: str = "bf16",
     microbatches: Optional[int] = None, skip_probes: bool = False,
     mesh_shape: Optional[tuple[int, int]] = None, kv_quant: bool = False,
+    cache_format: Optional[str] = None,
     moe_impl: Optional[str] = None, min_dim: int = 64,
 ) -> dict:
     cfg = get_config(arch)
     if kv_quant:
         cfg = dataclasses.replace(cfg, kv_quant=True)
+    if cache_format is not None:
+        cfg = dataclasses.replace(cfg, cache_format=cache_format)
     if moe_impl:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     cell = SHAPES[shape]
     kw = dict(multi_pod=multi_pod, qmode=qmode, microbatches=microbatches,
-              mesh_shape=mesh_shape, kv_quant=kv_quant, moe_impl=moe_impl,
+              mesh_shape=mesh_shape, kv_quant=kv_quant,
+              cache_format=cache_format, moe_impl=moe_impl,
               min_dim=min_dim)
     rec = lower_cell(arch, shape, **kw)
     rec["status"] = "ok"
@@ -646,6 +632,12 @@ def main():
                     help="registered residency format name (one of "
                          f"{', '.join(residency.formats())}) or a per-layer "
                          "policy like 'ffn=bsdp,default=w8a8'")
+    ap.add_argument("--cache-format", default=None,
+                    choices=list(kvcache.formats()),
+                    help="decode-cache residency format (registered in "
+                         "repro.core.kvcache.FORMATS); decode-cell cache "
+                         "inputs and analytic cache bytes both derive from "
+                         "its abstract_state")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--min-dim", type=int, default=64,
                     help="residency-conversion floor: quantizable leaves "
@@ -677,10 +669,13 @@ def main():
     for arch, shape in cells:
         for mp in meshes:
             tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}__{args.qmode}"
+            if args.cache_format:
+                tag += f"__kv_{args.cache_format}"
             path = os.path.join(args.out, tag + ".json")
             try:
                 rec = analyze_cell(
                     arch, shape, multi_pod=mp, qmode=args.qmode,
+                    cache_format=args.cache_format,
                     microbatches=args.microbatches,
                     skip_probes=args.skip_probes or mp,
                     min_dim=args.min_dim,

@@ -4,12 +4,14 @@ Initializes (or restores) a model, converts weights to the requested
 residency policy — the paper's one-time GEMV-V layout transform — and
 serves synthetic batched requests through the continuous-batching engine,
 reporting throughput.  ``--mode`` takes a registered format name (uniform
-residency) or a per-layer ResidencySpec string:
+residency) or a per-layer ResidencySpec string; ``--cache-format`` selects
+the decode-cache residency independently (``repro.core.kvcache.FORMATS``:
+bf16 | int8 | int4_bp), composing weight × cache residency:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --mode w8a8 --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --mode 'ffn=bsdp,mixer=w8a16,default=w8a8'
+        --mode 'ffn=bsdp,mixer=w8a16,default=w8a8' --cache-format int4_bp
 """
 
 from __future__ import annotations
@@ -22,7 +24,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
-from repro.core import residency
+from repro.core import kvcache, residency
 from repro.models import model as model_lib
 from repro.serve import engine
 from repro.sharding import partitioning as P
@@ -36,6 +38,10 @@ def main():
                     help="registered format name (one of "
                          f"{', '.join(residency.formats())}) or a per-layer "
                          "policy like 'ffn=bsdp,default=w8a8'")
+    ap.add_argument("--cache-format", default=None,
+                    choices=list(kvcache.formats()),
+                    help="decode-cache residency format (default: the "
+                         "arch config's; int4_bp = §IV bit-plane K/V)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--min-dim", type=int, default=64,
                     help="residency-conversion floor (smaller projections "
@@ -70,8 +76,10 @@ def main():
           f"{engine.resident_bytes(qparams)/1e6:.1f} MB resident")
 
     eng = engine.ServeEngine(
-        qparams, cfg, slots=args.slots, max_len=args.max_len
+        qparams, cfg, slots=args.slots, max_len=args.max_len,
+        cache_format=args.cache_format,
     )
+    print(f"cache format: {eng.cache_format}")
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(

@@ -12,6 +12,14 @@ flash-decoding partial-softmax combine).
 Decode caches are position-indexed ring buffers: a cache of length L holds
 (k, v, pos_ids); slot = position mod L.  With L = max_len this is a plain
 cache; with L = window it implements sliding-window eviction exactly.
+Cache *residency* — how each slot is stored (bf16, int8+per-slot scales,
+int4 bit-planes) and how decode attention reads it back — is owned by the
+:mod:`repro.core.kvcache` format registry: ``init_kv_cache``/``_ring_write``
+/``_decode_attention`` and the MLA twins route every payload touch through
+``cfg``'s registered :class:`~repro.core.kvcache.CacheFormat`
+(``cfg.cache_format``; the legacy ``cfg.kv_quant`` boolean maps to
+``"int8"``).  Negative positions (left-padded microbatched prefill) are
+dropped from the ring scatter and masked from attention.
 
 MLA (DeepSeek-V2 / MiniCPM3) caches only the **latent** (kv_lora + rope
 key) — itself a "shrink the resident bytes" technique that composes with
@@ -28,6 +36,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvcache
 from repro.models import layers
 from repro.models.layers import dense
 from repro.sharding.partitioning import ParamSpec
@@ -137,7 +146,7 @@ def gqa_prefill(params, x, cfg, *, tp, cache_len, positions=None, impl=None,
     )
     out = dense(params["wo"], out.reshape(b, s, -1), impl=impl)
     cache = init_kv_cache(cfg, b, cache_len, tp=tp, dtype=k.dtype)
-    cache = _ring_write(cache, k, v, positions)
+    cache = _ring_write(cache, k, v, positions, kvcache.format_for(cfg))
     return out, cache
 
 
@@ -149,102 +158,85 @@ def gqa_decode(params, x, cache, cfg, *, tp, pos, impl=None):
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     positions = pos[:, None]
     q, k, v = _project_qkv(params, x, cfg, tp, positions, impl=impl)
-    cache = _ring_write(cache, k, v, positions)
+    fmt = kvcache.format_for(cfg)
+    cache = _ring_write(cache, k, v, positions, fmt)
     out = _decode_attention(
-        q, cache["k"], cache["v"], cache["pos_ids"],
-        cur=pos, window=cfg.sliding_window,
-        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+        q, cache, cur=pos, window=cfg.sliding_window, fmt=fmt,
     )
     out = dense(params["wo"], out.reshape(b, 1, -1), impl=impl)
     return out, cache
 
 
 # ---------------------------------------------------------------------------
-# Ring KV cache
+# Ring KV cache (residency format owned by repro.core.kvcache)
 # ---------------------------------------------------------------------------
 
 
 def init_kv_cache(cfg, batch: int, cache_len: int, *, tp: int = 1, dtype=None):
+    """Allocate the GQA ring cache through ``cfg``'s cache format.
+
+    K and V are two format channels with lead dims ``(kv_heads,)`` and
+    feature ``d_head``; ``pos_ids`` (absolute position per slot, -1 = empty)
+    is format-independent.
+    """
     _, kvp, _ = attn_dims(cfg, tp)
     dtype = dtype or cfg.dtype
-    if cfg.kv_quant:
-        # int8 payload + per-(slot, head) scales — the paper's shrink-the-
-        # resident-bytes move applied to the decode cache (SPerf P1)
-        cache = {
-            "k": jnp.zeros((batch, cache_len, kvp, cfg.d_head), jnp.int8),
-            "v": jnp.zeros((batch, cache_len, kvp, cfg.d_head), jnp.int8),
-            "k_scale": jnp.zeros((batch, cache_len, kvp), jnp.float32),
-            "v_scale": jnp.zeros((batch, cache_len, kvp), jnp.float32),
-            "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
-        }
-        return cache
-    return {
-        "k": jnp.zeros((batch, cache_len, kvp, cfg.d_head), dtype),
-        "v": jnp.zeros((batch, cache_len, kvp, cfg.d_head), dtype),
-        # absolute position held in each slot; -1 = empty
-        "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
-    }
+    fmt = kvcache.format_for(cfg)
+    cache = {}
+    for prefix in ("k", "v"):
+        store = fmt.init(batch, cache_len, (kvp,), cfg.d_head, dtype=dtype)
+        cache.update(fmt.channel_entries(prefix, store))
+    cache["pos_ids"] = jnp.full((batch, cache_len), -1, jnp.int32)
+    return cache
 
 
-def _quant_slots(x):
-    """[B,S,H,D] -> int8 payload + per-(B,S,H) scale."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(amax, 1e-6) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
-    return q.astype(jnp.int8), scale
+def _ring_slots(positions, ln):
+    """slots = position mod L; negative (padded) positions → L, which the
+    ``mode="drop"`` scatters discard — exact SWA eviction, pad-safe."""
+    return jnp.where(positions >= 0, positions % ln, ln)
 
 
-def _ring_write(cache, k, v, positions):
-    """Scatter S new (k, v) at slots = position mod L (exact SWA eviction)."""
-    ln = cache["k"].shape[1]
-    slots = positions % ln  # [B, S]
+def _ring_write(cache, k, v, positions, fmt):
+    """Scatter S new (k, v) at slots = position mod L through the format."""
+    ln = cache["pos_ids"].shape[1]
+    slots = _ring_slots(positions, ln)  # [B, S]
     b_idx = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
     out = dict(cache)
-    if "k_scale" in cache:
-        kq, ks = _quant_slots(k)
-        vq, vs = _quant_slots(v)
-        out["k"] = cache["k"].at[b_idx, slots].set(kq)
-        out["v"] = cache["v"].at[b_idx, slots].set(vq)
-        out["k_scale"] = cache["k_scale"].at[b_idx, slots].set(ks)
-        out["v_scale"] = cache["v_scale"].at[b_idx, slots].set(vs)
-    else:
-        out["k"] = cache["k"].at[b_idx, slots].set(k.astype(cache["k"].dtype))
-        out["v"] = cache["v"].at[b_idx, slots].set(v.astype(cache["v"].dtype))
-    out["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(positions)
+    for prefix, x in (("k", k), ("v", v)):
+        store = fmt.append(fmt.channel(cache, prefix), x, b_idx, slots)
+        out.update(fmt.channel_entries(prefix, store))
+    out["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(
+        positions, mode="drop")
     return out
 
 
-def _decode_attention(q, k, v, pos_ids, *, cur, window,
-                      k_scale=None, v_scale=None):
-    """q: [B,1,H,D] vs full cache [B,L,Hkv,D]; mask by stored positions.
+def _decode_attention(q, cache, *, cur, window, fmt):
+    """q: [B,1,H,D] vs the full ring cache; mask by stored positions.
 
     cur: per-row current position [B].  When the cache L axis is sharded
     (long-context sequence parallelism) the max/sum reductions below become
     the flash-decoding combine.
 
-    int8 cache (k_scale/v_scale given): per-slot scales are constant over
-    the head dim, so dequantization FOLDS AFTER the contraction —
-    ``scores = (q·k_int8)·scale`` and ``out = (w·v_scale)·v_int8`` — the
-    same scale-in-epilogue trick as the quantized matmul kernels; the f32
-    cache copy is never materialized.
+    The score and value reads go through the cache format's ``qk``/``av``
+    gather paths: quantized formats fold per-slot scales AFTER the integer
+    contraction (``scores = (q·k_int)·scale``, ``out = (w·v_scale)·v_int``)
+    and the bit-plane format contracts directly on the stored planes — the
+    f32 cache copy is never materialized.
     """
     b, _, hq, dh = q.shape
-    hkv = k.shape[2]
+    hkv = cache["k"].shape[2]
     g = hq // hkv
-    qg = q.reshape(b, 1, hkv, g, dh).astype(jnp.float32)
-    scores = jnp.einsum("bqhgd,blhd->bhgql", qg, k.astype(jnp.float32))
-    if k_scale is not None:
-        scores = scores * jnp.moveaxis(k_scale, 2, 1)[:, :, None, None, :]
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    scores = fmt.qk(qg, fmt.channel(cache, "k"))  # [B, Hkv, G, L]
     scores = scores / math.sqrt(dh)
     cur = jnp.broadcast_to(jnp.asarray(cur, jnp.int32), (b,))
+    pos_ids = cache["pos_ids"]
     valid = (pos_ids >= 0) & (pos_ids <= cur[:, None])
     if window is not None:
         valid &= pos_ids > (cur[:, None] - window)
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
-    if v_scale is not None:
-        w = w * jnp.moveaxis(v_scale, 2, 1)[:, :, None, None, :]
-    out = jnp.einsum("bhgql,blhd->bqhgd", w, v.astype(jnp.float32))
+    out = fmt.av(w, fmt.channel(cache, "v"), dh)  # [B, Hkv, G, D]
     return out.reshape(b, 1, hq, dh).astype(q.dtype)
 
 
@@ -416,52 +408,47 @@ def mla_apply(params, x, cfg, *, tp=1, positions=None, impl=None, cache_len=None
     if cache_len is None:
         return out
     cache = init_mla_cache(cfg, b, cache_len, dtype=c_kv.dtype)
-    cache = _mla_write(cache, c_kv, k_rope, positions)
+    cache = _mla_write(cache, c_kv, k_rope, positions, kvcache.format_for(cfg))
     return out, cache
 
 
 def init_mla_cache(cfg, batch, cache_len, dtype=None):
+    """MLA latent cache: the ``c_kv`` channel (lead ``()``, feature = lora
+    rank) goes through ``cfg``'s cache format; the tiny rope key stays float
+    (phase precision), exactly as the int8 path always did."""
     dtype = dtype or cfg.dtype
-    if cfg.kv_quant:
-        return {
-            "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), jnp.int8),
-            "c_scale": jnp.zeros((batch, cache_len), jnp.float32),
-            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
-            "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
-        }
-    return {
-        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
-        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
-        "pos_ids": jnp.full((batch, cache_len), -1, jnp.int32),
-    }
+    fmt = kvcache.format_for(cfg)
+    cache = dict(fmt.channel_entries(
+        "c_kv", fmt.init(batch, cache_len, (), cfg.kv_lora_rank, dtype=dtype)
+    ))
+    cache["k_rope"] = jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype)
+    cache["pos_ids"] = jnp.full((batch, cache_len), -1, jnp.int32)
+    return cache
 
 
-def _mla_write(cache, c_kv, k_rope, positions):
-    ln = cache["c_kv"].shape[1]
-    slots = positions % ln
+def _mla_write(cache, c_kv, k_rope, positions, fmt):
+    ln = cache["pos_ids"].shape[1]
+    slots = _ring_slots(positions, ln)
     b_idx = jnp.arange(c_kv.shape[0], dtype=jnp.int32)[:, None]
     out = dict(cache)
-    if "c_scale" in cache:
-        amax = jnp.max(jnp.abs(c_kv.astype(jnp.float32)), axis=-1)
-        scale = jnp.maximum(amax, 1e-6) / 127.0
-        q = jnp.clip(
-            jnp.round(c_kv.astype(jnp.float32) / scale[..., None]), -127, 127
-        ).astype(jnp.int8)
-        out["c_kv"] = cache["c_kv"].at[b_idx, slots].set(q)
-        out["c_scale"] = cache["c_scale"].at[b_idx, slots].set(scale)
-    else:
-        out["c_kv"] = cache["c_kv"].at[b_idx, slots].set(
-            c_kv.astype(cache["c_kv"].dtype)
-        )
+    store = fmt.append(fmt.channel(cache, "c_kv"), c_kv, b_idx, slots)
+    out.update(fmt.channel_entries("c_kv", store))
     out["k_rope"] = cache["k_rope"].at[b_idx, slots].set(
-        k_rope.astype(cache["k_rope"].dtype)
+        k_rope.astype(cache["k_rope"].dtype), mode="drop"
     )
-    out["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(positions)
+    out["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(
+        positions, mode="drop")
     return out
 
 
 def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
-    """Absorbed-form MLA decode: score and read in the latent space."""
+    """Absorbed-form MLA decode: score and read in the latent space.
+
+    The latent cache reads route through the cache format's ``qk``/``av``
+    gathers with lead dims ``()`` — per-head absorbed queries play the role
+    of the GQA group axis — so int8 scale folding and the bit-plane
+    popcount/GEMM score path apply to the MLA latent exactly as to K/V.
+    """
     b = x.shape[0]
     hp = mla_dims(cfg, tp)
     dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
@@ -469,7 +456,8 @@ def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
     positions = pos[:, None]
     q_nope, q_rope = _mla_q(params, x, cfg, hp, positions, impl=impl)  # [B,1,H,*]
     c_kv_new, k_rope_new = _mla_latent(params, x, cfg, positions, impl=impl)
-    cache = _mla_write(cache, c_kv_new, k_rope_new, positions)
+    fmt = kvcache.format_for(cfg)
+    cache = _mla_write(cache, c_kv_new, k_rope_new, positions, fmt)
 
     # absorbed decode requires the float matrix; quantized residency applies
     # to the projections above, while absorption stays in the latent space.
@@ -478,22 +466,17 @@ def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
 
     q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
                        w_uk_f.astype(jnp.float32))  # [B,1,H,r]
-    ckv = cache["c_kv"].astype(jnp.float32)  # [B,L,r] (int8 payload or bf16)
-    c_scale = cache.get("c_scale")  # [B,L] when kv_quant
+    store = fmt.channel(cache, "c_kv")
+    s_nope = fmt.qk(q_abs[:, 0], store)  # [B,H,L], scales folded
     krope = cache["k_rope"].astype(jnp.float32)  # [B,L,dr]
-    s_nope = jnp.einsum("bqhr,blr->bhql", q_abs, ckv)
-    if c_scale is not None:  # dequant folded after the contraction
-        s_nope = s_nope * c_scale[:, None, None, :]
     scores = (
         s_nope
-        + jnp.einsum("bqhd,bld->bhql", q_rope.astype(jnp.float32), krope)
+        + jnp.einsum("bqhd,bld->bhl", q_rope.astype(jnp.float32), krope)
     ) / math.sqrt(dn + dr)
     valid = (cache["pos_ids"] >= 0) & (cache["pos_ids"] <= pos[:, None])
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
-    if c_scale is not None:
-        w = w * c_scale[:, None, None, :]
-    ctx_lat = jnp.einsum("bhql,blr->bqhr", w, ckv)  # [B,1,H,r]
+    ctx_lat = fmt.av(w, store, r)[:, None]  # [B,1,H,r]
     out = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, w_uv_f.astype(jnp.float32))
     out = dense(params["wo"], out.reshape(b, 1, hp * dv).astype(x.dtype), impl=impl)
     return out, cache

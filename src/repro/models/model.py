@@ -179,6 +179,11 @@ def prefill(
 
     max_len bounds the decode horizon: attention caches are allocated at
     ``min(max_len, sliding_window)`` ring length; mamba caches are O(1).
+
+    ``batch["positions"]`` (optional, [B,S] int32) overrides the default
+    ``arange`` positions — left-padded microbatched prefill marks pad
+    tokens with negative positions, which rope/masking ignore and the ring
+    caches drop (attention-only architectures).
     """
     ctx = None
     if cfg.is_enc_dec:
@@ -189,6 +194,7 @@ def prefill(
     cache_len = stack._cache_len_for(cfg, max_len)
     x, caches, _ = _decoder_forward(
         params, batch["tokens"], cfg, tp=tp, mode="prefill", ctx=ctx,
+        pos=batch.get("positions"),
         cache_len=cache_len, rules=rules, impl=impl, probe=probe,
     )
     logits = layers.logits_apply(params["embed"], x[:, -1:], cfg, impl=impl)

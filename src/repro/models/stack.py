@@ -151,7 +151,7 @@ def slot_apply(
             elif mode == "prefill":
                 a, self_c = attention.mla_apply(
                     params["mixer"], h, cfg, tp=tp, cache_len=cache_len,
-                    impl=impl, **attn_kw,
+                    positions=pos, impl=impl, **attn_kw,
                 )
                 new_cache = self_c
             else:
@@ -166,8 +166,8 @@ def slot_apply(
                     if causal else _bidir_attn(params["mixer"], h, cfg, tp, impl, **attn_kw)
             elif mode == "prefill":
                 a, self_c = attention.gqa_prefill(
-                    params["mixer"], h, cfg, tp=tp, cache_len=cache_len, impl=impl,
-                    **attn_kw,
+                    params["mixer"], h, cfg, tp=tp, cache_len=cache_len,
+                    positions=pos, impl=impl, **attn_kw,
                 )
                 new_cache = self_c
             else:

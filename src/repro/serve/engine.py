@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + decode with quantized weight residency.
+"""Serving engine: batched prefill + decode with quantized residency.
 
 The paper's GEMV-V scenario as a service: weights are converted once to a
 quantized residency mode (``convert_params``), stay device-resident, and
@@ -7,9 +7,19 @@ every request runs prefill + N decode steps against them.  Per the paper's
 convert time; the per-request activation quantization is fused in the
 kernels.
 
+Residency is two-dimensional: ``mode`` selects the *weight* policy
+(:mod:`repro.core.residency`) and ``cache_format`` the *decode-cache*
+format (:mod:`repro.core.kvcache` — ``"bf16"``, ``"int8"``, or the §IV
+bit-plane ``"int4_bp"``), so e.g. BSDP FFN weights can serve against an
+int4 bit-plane KV cache — the two largest resident payloads shrunk by the
+same registry discipline.
+
 ``ServeEngine`` also implements continuous batched decode: requests of
 different lengths share one ring-cache batch; finished slots are refilled
-by new prompts (prefill into the slot) without stopping the decode loop.
+by new prompts without stopping the decode loop.  All refills queued in
+one ``step`` run as ONE microbatched prefill call (left-padded, negative
+positions masked) instead of batch=1 per slot, flattening refill latency
+under heavy traffic.
 """
 
 from __future__ import annotations
@@ -21,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import qlinear, residency
+from repro.core import kvcache, qlinear, residency
 from repro.models import model as model_lib
 
 # Parameter-tree paths (leaf dict keys) eligible for quantized residency.
@@ -122,6 +132,13 @@ class ServeEngine:
     to the plane-pair GEMM kernel, single-token traffic to the popcount
     GEMV kernel); a mixed policy like ``{"ffn": "bsdp", "mixer": "w8a16"}``
     keeps BSDP for the giant FFN GEMVs and w8a16 elsewhere.
+
+    ``cache_format`` independently selects the decode-cache residency — a
+    name registered in :data:`repro.core.kvcache.FORMATS` (``"bf16"``,
+    ``"int8"``, ``"int4_bp"``).  Cache splice and refill operate on the
+    quantized storage; weight and cache residency compose freely
+    (``mode={"ffn": "bsdp"}, cache_format="int4_bp"`` serves both dominant
+    payloads bit-plane-resident).
     """
 
     def __init__(
@@ -135,16 +152,20 @@ class ServeEngine:
         rules=None,
         impl: Optional[str] = "jnp",
         mode: residency.SpecLike = "bf16",
+        cache_format: Optional[str] = None,
         min_dim: int = 64,
         trace_logits: bool = False,
     ):
         spec = residency.ResidencySpec.parse(mode)
         if not spec.is_trivial:
             params = convert_params(params, cfg, spec, min_dim=min_dim)
+        if cache_format is not None:
+            cfg = dataclasses.replace(cfg, cache_format=cache_format)
         self.params, self.cfg, self.tp = params, cfg, tp
         self.slots, self.max_len, self.rules, self.impl = slots, max_len, rules, impl
         self.spec = spec
         self.mode = spec.describe()
+        self.cache_format = kvcache.format_for(cfg).name
         self.trace_logits = trace_logits
         #: when ``trace_logits``: [(kind, slots, np.ndarray logits)] in
         #: execution order — ("prefill", (slot,), [vocab]) and
@@ -153,7 +174,14 @@ class ServeEngine:
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.caches = None
-        self.pos = np.zeros(slots, np.int64)
+        # np.int32 to match the jnp.int32 positions at the decode boundary
+        self.pos = np.zeros(slots, np.int32)
+        # left-padded microbatched refill needs position-aware layers only;
+        # SSM state would absorb pad tokens, so hybrids refill one by one
+        self._pad_ok = all(
+            cfg.mixer_kind(i) in ("attn", "attn_cross", "cross")
+            for i in range(cfg.n_layers)
+        )
 
         self._decode = jax.jit(
             lambda p, tok, caches, pos: model_lib.decode_step(
@@ -178,49 +206,81 @@ class ServeEngine:
             return int(req.force[i])
         return int(np.argmax(logits_row))
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Prefill one request and splice its caches into the batch caches.
+    def _prefill_slots(self, assignments: list[tuple[int, "Request"]]):
+        """Microbatched refill: ONE prefill call for every queued refill.
 
-        Single-request prefill at batch=1 keeps slot refill latency flat —
-        production would microbatch these; the cache splice is the same.
+        Prompts of different lengths are left-padded; pad tokens carry
+        negative positions, which rope/masking ignore and the ring caches
+        drop — so each row's cache is identical to a batch=1 prefill.  The
+        per-row caches are then spliced into the slot batch (the caches are
+        quantized storage throughout: splice and refill never materialize a
+        float cache).
         """
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-        logits, cache1 = model_lib.prefill(
+        lens = [len(req.prompt) for _, req in assignments]
+        s_max = max(lens)
+        toks = np.zeros((len(assignments), s_max), np.int32)
+        pos = np.zeros((len(assignments), s_max), np.int32)
+        for i, (_, req) in enumerate(assignments):
+            pad = s_max - len(req.prompt)
+            toks[i, pad:] = req.prompt
+            pos[i] = np.arange(s_max, dtype=np.int32) - pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if s_max != min(lens):
+            batch["positions"] = jnp.asarray(pos)
+        logits, cache_b = model_lib.prefill(
             self.params, batch, self.cfg, tp=self.tp,
             max_len=self.max_len, rules=self.rules, impl=self.impl,
         )
         if self.caches is None:
-            # first request: broadcast structure to all slots
-            self.caches = jax.tree_util.tree_map(
-                lambda a: jnp.concatenate([jnp.zeros_like(a)] * self.slots, axis=_bdim(a)),
-                cache1,
+            # first refill: allocate zeros at the full slot-batch shape
+            # directly (no slots× temporary from a concatenate broadcast)
+            self.caches = _tree_batched(
+                cache_b, lambda a, axis: jnp.zeros(
+                    a.shape[:axis] + (self.slots,) + a.shape[axis + 1:],
+                    a.dtype,
+                ),
             )
-        self.caches = jax.tree_util.tree_map(
-            lambda full, one: _splice(full, one, slot), self.caches, cache1
+        # one scatter per leaf splices ALL refilled rows at once (row i of
+        # the prefill batch → slot assignments[i][0]) — no per-slot copy
+        slot_ids = jnp.array([slot for slot, _ in assignments], jnp.int32)
+        self.caches = _tree_batched_pair(
+            self.caches, cache_b,
+            lambda full, rows, axis: (
+                full.at[slot_ids].set(rows) if axis == 0
+                else full.at[:, slot_ids].set(rows)
+            ),
         )
-        last = np.asarray(logits)[0, -1]
-        if self.trace_logits:
-            self.logit_trace.append(("prefill", (slot,), last))
-        req.out.append(self._next_token(req, last))
-        self.pos[slot] = len(req.prompt)
-        self.active[slot] = req
+        last_logits = np.asarray(logits[:, -1])
+        for i, (slot, req) in enumerate(assignments):
+            if self.trace_logits:
+                self.logit_trace.append(("prefill", (slot,), last_logits[i]))
+            req.out.append(self._next_token(req, last_logits[i]))
+            self.pos[slot] = len(req.prompt)
+            self.active[slot] = req
 
     def step(self):
         """Refill empty slots, then one decode step for the whole batch."""
+        refills = []
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                self._prefill_slot(s, self.queue.pop(0))
+                refills.append((s, self.queue.pop(0)))
+        if refills:
+            if self._pad_ok:
+                self._prefill_slots(refills)
+            else:  # SSM state cannot skip pad tokens: refill per slot
+                for s, req in refills:
+                    self._prefill_slots([(s, req)])
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return False
         toks = np.zeros((self.slots, 1), np.int32)
         for s in live:
             toks[s, 0] = self.active[s].out[-1]
-        # decode positions differ per slot; the cache is position-indexed so
-        # we pass the max and mask via pos_ids (ring semantics handle gaps)
-        pos = int(max(self.pos[s] for s in live))
+        # per-slot decode positions (continuous batching): each row's token
+        # is rope'd and ring-written at its own position; dead slots carry
+        # stale positions but their rows are overwritten at refill
         logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches, jnp.int32(pos)
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(self.pos)
         )
         step_logits = np.asarray(logits[:, 0])
         if self.trace_logits:
@@ -239,13 +299,20 @@ class ServeEngine:
             pass
 
 
-def _bdim(a) -> int:
-    return 0 if a.ndim == 1 else (1 if a.shape[0] != 1 else 0)
+def _tree_batched(caches, fn):
+    """Map ``fn(leaf, batch_axis)`` over a decode-cache tree: prefix-layer
+    leaves carry batch at axis 0, scanned-stack leaves at axis 1."""
+    return {
+        "prefix": jax.tree_util.tree_map(lambda a: fn(a, 0), caches["prefix"]),
+        "stack": jax.tree_util.tree_map(lambda a: fn(a, 1), caches["stack"]),
+    }
 
 
-def _splice(full, one, slot):
-    # caches are stacked [n_sb, B, ...] (stack) or [B, ...] (prefix)
-    if full.ndim == one.ndim and full.ndim >= 2 and one.shape[0] == full.shape[0]:
-        # stacked leading layer dim; batch is axis 1
-        return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
-    return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=0)
+def _tree_batched_pair(full, part, fn):
+    """Two-tree variant of :func:`_tree_batched`."""
+    return {
+        "prefix": jax.tree_util.tree_map(
+            lambda f, o: fn(f, o, 0), full["prefix"], part["prefix"]),
+        "stack": jax.tree_util.tree_map(
+            lambda f, o: fn(f, o, 1), full["stack"], part["stack"]),
+    }

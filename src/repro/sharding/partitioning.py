@@ -235,6 +235,79 @@ def constrain(x: jax.Array, axes: Axes, rules: Mapping[str, MeshAxes]) -> jax.Ar
 
 
 # ---------------------------------------------------------------------------
+# Decode-cache sharding (registry-derived)
+# ---------------------------------------------------------------------------
+
+#: format-independent cache leaves → logical axes (without the stacked
+#: leading layer dim; ``cache_pspecs`` prepends it for in-stack leaves)
+_STATIC_CACHE_AXES = {
+    "pos_ids": ("batch", "kv_seq"),
+    "k_rope": ("batch", "kv_seq", None),
+    "ck": ("batch", None, "kv_heads_cache", None),
+    "cv": ("batch", None, "kv_heads_cache", None),
+    "conv": ("batch", None, "act_mlp"),
+    "ssm": ("batch", "act_mlp", None),
+}
+
+
+def cache_axes_table(cfg=None) -> dict[str, Axes]:
+    """Cache-leaf name → logical axes, derived from the cache format.
+
+    The K/V channels (and the MLA latent) get their payload/scale axes from
+    the registered :class:`repro.core.kvcache.CacheFormat`'s ``data_axes``
+    — e.g. the int4 bit-plane payload appends two unsharded plane dims —
+    so cache PartitionSpecs can never drift from the real cache layout.
+    ``cfg=None`` falls back to the ``bf16`` format (legacy callers).
+    """
+    from repro.core import kvcache
+
+    fmt = (kvcache.format_for(cfg) if cfg is not None
+           else kvcache.get_cache_format("bf16"))
+    base = ("batch", "kv_seq")
+    table = dict(_STATIC_CACHE_AXES)
+    for prefix, lead in (("k", ("kv_heads_cache",)),
+                         ("v", ("kv_heads_cache",)),
+                         ("c_kv", ())):
+        data_key, scale_key = kvcache.CHANNEL_KEYS[prefix]
+        axes = fmt.data_axes(lead)
+        table[data_key] = base + tuple(axes[""])
+        if "_scale" in axes:
+            table[scale_key] = base + tuple(axes["_scale"])
+    return table
+
+
+def cache_pspecs(cache_abs, rules: Mapping[str, MeshAxes], shard_kv: bool,
+                 cfg=None):
+    """PartitionSpec tree for a decode-cache pytree.
+
+    ``shard_kv`` gates kv-head sharding (head padding may break GQA group
+    structure); ``cfg`` selects the cache format whose ``data_axes`` shape
+    the table (see :func:`cache_axes_table`).
+    """
+    local_rules = dict(rules)
+    local_rules["kv_heads_cache"] = rules["kv_heads"] if shard_kv else None
+    table = cache_axes_table(cfg)
+
+    def leaf_spec(path, leaf):
+        name, in_stack = None, False
+        for p in path:
+            key = getattr(p, "key", None)
+            if key == "stack":
+                in_stack = True
+            if key in table:
+                name = key
+        if name is None:
+            return PartitionSpec()
+        axes = table[name]
+        if in_stack:
+            axes = (None,) + axes  # stacked scan dim — never sharded
+        axes = axes[: leaf.ndim]
+        return spec_for(tuple(axes), local_rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abs)
+
+
+# ---------------------------------------------------------------------------
 # Pad-to-shardable
 # ---------------------------------------------------------------------------
 

@@ -57,6 +57,21 @@ class TestBenchSmoke:
         )
         assert "spec=ffn=bsdp" in line and "resident_mb=" in line
 
+    def test_kv_cache_rows_present(self, smoke_output):
+        """The cache-residency ladder: one row per registered cache format,
+        each reporting resident cache MB + tok/s, bytes strictly ordered
+        int4_bp < int8 < bf16."""
+        ratios = {}
+        for fmt in ("bf16", "int8", "int4_bp"):
+            line = next(
+                l for l in smoke_output.splitlines()
+                if l.startswith(f"gemv_e2e/kv_cache_{fmt}")
+            )
+            assert "cache_mb=" in line and "tokens_per_s=" in line
+            ratios[fmt] = float(
+                line.split("ratio_vs_bf16=")[1].split(";")[0])
+        assert ratios["int4_bp"] < ratios["int8"] < ratios["bf16"] == 1.0
+
     def test_rows_are_csv_shaped(self, smoke_output):
         lines = [l for l in smoke_output.splitlines() if "/" in l and "," in l]
         assert lines, "no CSV rows at all"

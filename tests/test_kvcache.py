@@ -1,0 +1,384 @@
+"""Cache-residency subsystem tests (repro.core.kvcache).
+
+Anchored on the same two invariants as the weight-residency registry:
+
+1. **Registry consistency** — for every registered cache format, the
+   dry-run twin (``abstract_state``) matches real ``init`` storage in shape
+   and dtype, and byte accounting is identical whether computed from real
+   ring caches or abstract structs — dry-run cache bytes cannot drift from
+   real residency by construction.
+
+2. **Serving fidelity** — quantized caches (int8, bit-plane int4) decode
+   within quantization tolerance of the bf16 cache, across ring-buffer
+   wraparound (positions ≥ cache_len) and a full continuous-batching
+   schedule with mid-stream slot refill, for both GQA and MLA caches.
+
+Plus the engine-side satellites: microbatched slot refill equivalence and
+pad-position drop semantics.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import kvcache
+from repro.core.residency import KernelPolicy
+from repro.models import attention
+from repro.models import model as model_lib
+from repro.serve import engine
+from repro.sharding import partitioning as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+VOCAB = 128
+
+# production-ish channel dims: 8 kv heads × 128 head-dim (GQA), rank-512
+# latent (MLA) — where the bit-plane packing pays off (no word-pad slack)
+GQA_LEAD, GQA_FEAT = (8,), 128
+MLA_LEAD, MLA_FEAT = (), 512
+
+
+def _cfg(arch="qwen3-1.7b", **kw):
+    return get_smoke_config(arch).scaled(n_layers=2, vocab_size=VOCAB, **kw)
+
+
+def _params(cfg):
+    return P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
+
+
+def _rel_close(ref, got, tol=0.5, cos_min=0.9):
+    ref = np.asarray(ref, np.float32).ravel()
+    got = np.asarray(got, np.float32).ravel()
+    scale = np.abs(ref).max() + 1e-6
+    assert np.abs(ref - got).max() / scale < tol
+    cos = float(ref @ got / (np.linalg.norm(ref) * np.linalg.norm(got) + 1e-9))
+    assert cos > cos_min, cos
+
+
+class TestCacheRegistry:
+    """Acceptance: FORMATS ships ≥3 formats; abstract == real bytes."""
+
+    def test_registry_ships_three_formats(self):
+        assert set(kvcache.formats()) >= {"bf16", "int8", "int4_bp"}
+        assert kvcache.FORMATS["int4_bp"].is_bitplane
+        with pytest.raises(ValueError, match="unknown cache format"):
+            kvcache.get_cache_format("fp3_nope")
+
+    @pytest.mark.parametrize("mode", kvcache.formats())
+    @pytest.mark.parametrize("lead,feat", [(GQA_LEAD, GQA_FEAT),
+                                           (MLA_LEAD, MLA_FEAT),
+                                           ((3,), 40)])  # word-pad slack
+    def test_abstract_state_matches_init(self, mode, lead, feat):
+        fmt = kvcache.get_cache_format(mode)
+        real = fmt.init(2, 16, lead, feat)
+        ab = fmt.abstract_state(2, 16, lead, feat)
+        assert set(real) == set(ab) == set(fmt.suffixes)
+        for sfx in fmt.suffixes:
+            assert real[sfx].shape == ab[sfx].shape, (mode, sfx)
+            assert real[sfx].dtype == ab[sfx].dtype, (mode, sfx)
+        rb = fmt.resident_bytes(real)
+        assert rb == fmt.resident_bytes(ab)
+        assert rb == sum(a.size * a.dtype.itemsize for a in real.values())
+
+    def test_int4_bp_shrinks_cache_bytes_4x(self):
+        """Acceptance: int4_bp ≤ 0.30× bf16 cache bytes (GQA and MLA)."""
+        bf16 = kvcache.get_cache_format("bf16")
+        bp = kvcache.get_cache_format("int4_bp")
+        int8 = kvcache.get_cache_format("int8")
+        for lead, feat in ((GQA_LEAD, GQA_FEAT), (MLA_LEAD, MLA_FEAT)):
+            ratio = bp.slot_bytes(lead, feat) / bf16.slot_bytes(lead, feat)
+            assert ratio <= 0.30, (lead, feat, ratio)
+            assert bp.slot_bytes(lead, feat) < int8.slot_bytes(lead, feat)
+
+    @pytest.mark.parametrize("mode", kvcache.formats())
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "minicpm3-4b"])
+    def test_dryrun_cache_bytes_equal_real(self, mode, arch):
+        """Acceptance: dry-run cache bytes (eval_shape of init_cache, i.e.
+        pure abstract_state) == the serving engine's real resident cache
+        bytes — the cache analogue of residency_qbytes drift-killing."""
+        cfg = dataclasses.replace(_cfg(arch), cache_format=mode)
+        params = _params(cfg)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.array(rng.integers(0, VOCAB, (3, 7)), jnp.int32)}
+        _, caches = model_lib.prefill(params, batch, cfg, tp=1, max_len=24)
+        abstract = jax.eval_shape(lambda: model_lib.init_cache(cfg, 3, 24, tp=1))
+        assert kvcache.cache_resident_bytes(caches) == \
+            kvcache.cache_resident_bytes(abstract)
+
+    def test_popcount_and_planes_gemm_agree_exactly(self):
+        """Both int4_bp score kernels are the same integer math (Algorithm 2
+        == plane-pair 0/1 matmuls) — bit-for-bit, like the weight kernels."""
+        rng = np.random.default_rng(1)
+        pop = kvcache.BitPlaneCacheFormat(
+            "t_pop", KernelPolicy(gemv="popcount", gemm="popcount"))
+        gemm = kvcache.BitPlaneCacheFormat(
+            "t_gemm", KernelPolicy(gemv="planes_gemm", gemm="planes_gemm"))
+        store = pop.init(2, 16, (3,), 40)
+        x = jnp.array(rng.normal(size=(2, 16, 3, 40)).astype(np.float32))
+        slots = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+        store = pop.append(store, x, jnp.arange(2)[:, None], slots)
+        q = jnp.array(rng.normal(size=(2, 3, 4, 40)).astype(np.float32))
+        assert bool(jnp.all(pop.qk(q, store) == gemm.qk(q, store)))
+
+    def test_kernel_policy_is_data(self):
+        fmt = kvcache.get_cache_format("int4_bp")
+        assert fmt.kernel_policy.kernel_for(1) == "popcount"
+        assert fmt.kernel_policy.kernel_for(8) == "planes_gemm"
+
+    def test_format_for_resolves_legacy_kv_quant(self):
+        assert kvcache.format_for(_cfg()).name == "bf16"
+        assert kvcache.format_for(
+            dataclasses.replace(_cfg(), kv_quant=True)).name == "int8"
+        assert kvcache.format_for(
+            dataclasses.replace(_cfg(), kv_quant=True, cache_format="int4_bp")
+        ).name == "int4_bp"
+
+    def test_register_new_format_plugs_into_everything(self):
+        """The ≤20-line extension story: register a format, and the ring
+        caches, the engine and the dry-run accounting pick it up with no
+        call-site edits (mirrors test_residency's registration test)."""
+
+        class F32Cache(kvcache.BF16CacheFormat):
+            name = "f32_cache"
+            dtype = jnp.float32  # twice the bytes — trivially correct
+
+        try:
+            kvcache.register_cache_format(F32Cache())
+            cfg = _cfg()
+            eng = engine.ServeEngine(
+                _params(cfg), cfg, slots=1, max_len=16,
+                cache_format="f32_cache", min_dim=16,
+            )
+            eng.submit(np.arange(4, dtype=np.int32), 2)
+            eng.run()
+            assert eng.cache_format == "f32_cache"
+            assert eng.caches["stack"]["slot0"]["k"].dtype == jnp.float32
+            fmt = kvcache.get_cache_format("f32_cache")
+            assert fmt.resident_bytes(fmt.abstract_state(1, 8, (2,), 16)) == \
+                2 * kvcache.FORMATS["bf16"].slot_bytes((2,), 16) * 8
+        finally:
+            kvcache.FORMATS.pop("f32_cache", None)
+
+
+class TestCacheSharding:
+    """Cache PartitionSpecs derive from the format's data_axes."""
+
+    @pytest.mark.parametrize("mode", kvcache.formats())
+    def test_cache_pspecs_cover_payload_ranks(self, mode):
+        cfg = dataclasses.replace(_cfg(), cache_format=mode)
+        cache_abs = jax.eval_shape(lambda: model_lib.init_cache(cfg, 4, 16, tp=1))
+        rules = P.base_rules()
+        specs = P.cache_pspecs(cache_abs, rules, True, cfg)
+        k_spec = specs["stack"]["slot0"]["k"]
+        k_abs = cache_abs["stack"]["slot0"]["k"]
+        # spec length never exceeds payload rank (plane dims stay unsharded)
+        assert len(k_spec) <= k_abs.ndim
+        assert "model" in jax.tree_util.tree_leaves(tuple(k_spec))
+        if mode != "bf16":
+            s_spec = specs["stack"]["slot0"]["k_scale"]
+            assert len(s_spec) <= cache_abs["stack"]["slot0"]["k_scale"].ndim
+
+    def test_table_tracks_format(self):
+        t_bf = P.cache_axes_table(_cfg())
+        t_bp = P.cache_axes_table(
+            dataclasses.replace(_cfg(), cache_format="int4_bp"))
+        assert len(t_bp["k"]) == len(t_bf["k"]) + 1  # extra plane dim
+        assert "k_scale" in t_bp and "k_scale" not in t_bf
+
+
+class TestRingWraparound:
+    """Satellite: decode past cache_len under every cache format."""
+
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "minicpm3-4b"])
+    def test_quantized_cache_tracks_bf16_past_wraparound(self, arch):
+        """Teacher-forced decode from position 12 to 19 against a 16-slot
+        ring: positions ≥ 16 overwrite slot (pos mod 16).  Quantized-cache
+        logits must stay inside int8/int4 tolerance of bf16 at EVERY step,
+        including after the wrap."""
+        cfg = _cfg(arch)
+        params = _params(cfg)
+        rng = np.random.default_rng(2)
+        prompt = jnp.array(rng.integers(0, VOCAB, (1, 12)), jnp.int32)
+        forced = rng.integers(0, VOCAB, size=8).astype(np.int32)
+        cache_len = 16
+
+        def run(mode):
+            c = dataclasses.replace(cfg, cache_format=mode)
+            _, caches = model_lib.prefill(
+                params, {"tokens": prompt}, c, tp=1, max_len=cache_len)
+            outs = []
+            for i, tok in enumerate(forced):
+                lg, caches = model_lib.decode_step(
+                    params, jnp.full((1, 1), tok, jnp.int32), caches,
+                    jnp.int32(12 + i), c, tp=1,
+                )
+                outs.append(np.asarray(lg[0, 0, :VOCAB]))
+            return outs, caches
+
+        ref, _ = run("bf16")
+        for mode, tol in (("int8", 0.25), ("int4_bp", 0.5)):
+            got, caches = run(mode)
+            for step, (r, g) in enumerate(zip(ref, got)):
+                _rel_close(r, g, tol=tol)
+            # the ring really wrapped: slots hold positions 4..19, not 0..15
+            pos_ids = np.sort(np.asarray(_first_pos_ids(caches))[0])
+            assert pos_ids.min() == 4 and pos_ids.max() == 19
+
+    def test_ring_write_drops_negative_positions(self):
+        """Left-pad positions (< 0) must not touch the ring (the scatter
+        redirect to slot L is dropped) — for every format."""
+        cfg = _cfg()
+        for mode in kvcache.formats():
+            c = dataclasses.replace(cfg, cache_format=mode)
+            fmt = kvcache.format_for(c)
+            cache = attention.init_kv_cache(c, 1, 8)
+            k = jnp.ones((1, 4, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+            positions = jnp.array([[-2, -1, 0, 1]], jnp.int32)
+            out = attention._ring_write(cache, k, k, positions, fmt)
+            pos_ids = np.asarray(out["pos_ids"][0])
+            assert list(pos_ids[:2]) == [0, 1]
+            assert (pos_ids[2:] == -1).all()
+            # slots beyond the written ones hold no payload
+            assert not np.asarray(out["k"][0, 2:]).any(), mode
+
+
+def _first_pos_ids(caches):
+    """pos_ids of the first attention slot in the scanned stack."""
+    for slot in caches["stack"].values():
+        sub = slot.get("self", slot)
+        if isinstance(sub, dict) and "pos_ids" in sub:
+            return sub["pos_ids"][0]  # first superblock
+    raise AssertionError("no attention cache found")
+
+
+class TestServeCacheFormats:
+    """Acceptance: 3-step continuous-batching decode with mid-stream slot
+    refill matches the bf16 engine within quant tolerance per format."""
+
+    def _run(self, params, cfg, cache_format):
+        rng = np.random.default_rng(0)
+        eng = engine.ServeEngine(
+            params, cfg, slots=2, max_len=32, cache_format=cache_format,
+            min_dim=16, trace_logits=True,
+        )
+        for n, mn in zip((5, 3, 7), (6, 2, 4)):
+            eng.submit(
+                rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn,
+                force=rng.integers(0, VOCAB, size=(mn,)).astype(np.int32),
+            )
+        eng.run()
+        return eng
+
+    @pytest.mark.parametrize("cache_format", ["int8", "int4_bp"])
+    def test_quantized_cache_engine_matches_bf16(self, cache_format):
+        cfg = _cfg()
+        params = _params(cfg)
+        ref = self._run(params, cfg, "bf16")
+        got = self._run(params, cfg, cache_format)
+        kinds = [(k, s) for k, s, _ in ref.logit_trace]
+        assert kinds == [(k, s) for k, s, _ in got.logit_trace]
+        # schedule includes a mid-stream refill and ≥3 decode steps
+        assert sum(1 for k, _ in kinds if k == "decode") >= 3
+        first_decode = kinds.index(("decode", (0, 1)))
+        assert any(k == "prefill" for k, _ in kinds[first_decode + 1:])
+        for (_, _, lr), (_, _, lg) in zip(ref.logit_trace, got.logit_trace):
+            _rel_close(lr, lg)
+
+    def test_cache_and_weight_residency_compose(self):
+        """Mixed ffn=bsdp weights × int4_bp cache serves end-to-end."""
+        cfg = _cfg()
+        params = _params(cfg)
+        ref = self._run(params, cfg, "bf16")
+        rng = np.random.default_rng(0)
+        eng = engine.ServeEngine(
+            params, cfg, slots=2, max_len=32,
+            mode={"ffn": "bsdp", "default": "w8a16"},
+            cache_format="int4_bp", min_dim=16, trace_logits=True,
+        )
+        for n, mn in zip((5, 3, 7), (6, 2, 4)):
+            eng.submit(
+                rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn,
+                force=rng.integers(0, VOCAB, size=(mn,)).astype(np.int32),
+            )
+        eng.run()
+        assert eng.cache_format == "int4_bp"
+        for (_, _, lr), (_, _, lg) in zip(ref.logit_trace, eng.logit_trace):
+            _rel_close(lr, lg)
+
+
+class TestMicrobatchedRefill:
+    """Satellite: queued refills aggregate into ONE batched prefill."""
+
+    def _engines(self, monkeypatch=None, pad_ok=True):
+        cfg = _cfg()
+        params = _params(cfg)
+        rng = np.random.default_rng(0)
+        eng = engine.ServeEngine(
+            params, cfg, slots=3, max_len=32, min_dim=16, trace_logits=True,
+        )
+        eng._pad_ok = pad_ok
+        for n, mn in zip((5, 3, 7), (4, 4, 4)):
+            eng.submit(
+                rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn,
+                force=rng.integers(0, VOCAB, size=(mn,)).astype(np.int32),
+            )
+        return eng
+
+    def test_one_prefill_call_for_concurrent_refills(self, monkeypatch):
+        calls = []
+        real = model_lib.prefill
+
+        def spy(*a, **kw):
+            calls.append(a[1]["tokens"].shape)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(model_lib, "prefill", spy)
+        eng = self._engines()
+        eng.run()
+        # 3 queued requests, 3 free slots → ONE prefill at batch 3
+        assert calls[0][0] == 3
+        assert all(c[0] == 1 for c in calls[1:])  # no other refills queued
+        # per-slot trace entries preserved
+        assert [(k, s) for k, s, _ in eng.logit_trace[:3]] == \
+            [("prefill", (0,)), ("prefill", (1,)), ("prefill", (2,))]
+
+    def test_batched_refill_matches_per_slot_refill(self):
+        """Left-padded microbatched prefill is numerically equivalent to
+        the per-slot path (pad positions are masked + dropped)."""
+        batched = self._engines(pad_ok=True)
+        batched.run()
+        serial = self._engines(pad_ok=False)
+        serial.run()
+        assert [(k, s) for k, s, _ in batched.logit_trace] == \
+            [(k, s) for k, s, _ in serial.logit_trace]
+        for (_, _, lb), (_, _, ls) in zip(batched.logit_trace,
+                                          serial.logit_trace):
+            np.testing.assert_allclose(
+                np.asarray(lb), np.asarray(ls), rtol=2e-4, atol=2e-4)
+
+
+class TestDryrunCacheTraffic:
+    """The analytic decode cache-traffic term derives from the registry."""
+
+    def test_cache_bytes_scale_with_format(self):
+        from repro.configs.base import ShapeCell
+        from repro.launch import dryrun as dr
+
+        cell = ShapeCell("d", 1024, 8, "decode")
+        cfg = get_smoke_config("qwen3-1.7b").scaled(
+            n_kv_heads=8, d_head=128)
+        by_fmt = {
+            m: dr._cache_bytes_local(
+                dataclasses.replace(cfg, cache_format=m), cell, 1, {})
+            for m in ("bf16", "int8", "int4_bp")
+        }
+        assert by_fmt["int4_bp"] < by_fmt["int8"] < by_fmt["bf16"]
+        assert by_fmt["int4_bp"] / by_fmt["bf16"] <= 0.30
+        # legacy kv_quant boolean still selects int8 accounting
+        legacy = dr._cache_bytes_local(
+            dataclasses.replace(cfg, kv_quant=True), cell, 1, {})
+        assert legacy == by_fmt["int8"]
