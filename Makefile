@@ -1,0 +1,9 @@
+# Tier-1 verification (the pinned command from ROADMAP.md): the full
+# deterministic test suite, including the benchmark bit-rot smoke.
+.PHONY: verify bench-smoke
+
+verify:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --smoke

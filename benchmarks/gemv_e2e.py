@@ -23,6 +23,16 @@ The ``kv_cache`` rows serve the same model under each registered decode-
 cache format (``repro.core.kvcache.FORMATS``: bf16 / int8 / int4_bp),
 reporting resident cache MB and tok/s — the cache-residency ladder that
 extends the §IV memory-term win to the second-largest resident payload.
+
+The ``sched`` rows complete the three-registry picture: a deterministic
+mixed-length arrival trace (one long prompt co-arriving with short
+interactive traffic, plus a late wave) is served under every registered
+scheduler (``repro.serve.scheduler.SCHEDULERS``: fcfs / sjf /
+token_budget) with BSDP weights × int4_bp cache — both dominant payloads
+bit-plane-resident — reporting tok/s and p50/p95 TTFT in deterministic
+work units (processed batch positions).  token_budget's chunked prefill
+keeps the short requests' TTFT bounded by its budget instead of the long
+prompt's length.
 """
 
 from __future__ import annotations
@@ -99,6 +109,7 @@ def run() -> list[str]:
             )
     rows.append(_mixed_residency_row())
     rows.extend(_kv_cache_rows())
+    rows.extend(_scheduler_rows())
     return rows
 
 
@@ -186,6 +197,63 @@ def _kv_cache_rows() -> list[str]:
             f"gemv_e2e/kv_cache_{fmt}", dt / max(toks, 1),
             f"cache_mb={mb:.3f};ratio_vs_bf16={mb/bf16_mb:.2f};"
             f"tokens_per_s={toks/dt:.1f}",
+        ))
+    return rows
+
+
+#: deterministic mixed-length arrival trace: (arrival_step, prompt_len,
+#: max_new) — one long prompt co-arrives with short interactive requests,
+#: a second short wave lands once slots free up.
+SCHED_TRACE = (
+    (0, 24, 3), (0, 4, 3), (0, 5, 3), (0, 6, 3), (0, 4, 3),
+    (2, 5, 3), (3, 6, 3), (4, 4, 3),
+)
+
+
+def _scheduler_rows() -> list[str]:
+    """Traffic-trace scheduler ladder: tok/s + p50/p95 TTFT per policy.
+
+    The same deterministic arrival trace runs through every registered
+    scheduler over BSDP weights × int4_bp bit-plane cache; TTFT is
+    reported in processed-position work units (the engine's deterministic
+    analytic clock), so the rows are reproducible in CI — token_budget's
+    p95 must stay ≤ fcfs's (asserted by tests/test_bench_smoke.py).
+    """
+    import time
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as model_lib
+    from repro.serve import engine, scheduler as sched_lib
+    from repro.sharding import partitioning as P
+
+    cfg = get_smoke_config("qwen3-1.7b").scaled(n_layers=2, vocab_size=128)
+    params = P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
+    rng0 = np.random.default_rng(0)
+    prompts = [rng0.integers(0, 128, size=(p,)).astype(np.int32)
+               for _, p, _ in SCHED_TRACE]
+    rows = []
+    for name in sched_lib.schedulers():
+        spec = name if name != "token_budget" else "token_budget:budget=8"
+        eng = engine.ServeEngine(
+            params, cfg, slots=4, max_len=32, mode="bsdp",
+            cache_format="int4_bp", scheduler=spec, min_dim=16,
+        )
+        trace = list(zip(SCHED_TRACE, prompts))
+        t0 = time.perf_counter()
+        while trace or any(eng.active) or eng.queue:
+            while trace and trace[0][0][0] <= eng.step_index:
+                (_, _, max_new), prompt = trace.pop(0)
+                eng.submit(prompt, max_new)
+            eng.step()
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        rows.append(row(
+            f"gemv_e2e/sched_{name}", dt / max(st.total_tokens, 1),
+            f"scheduler={st.scheduler.replace(',', '|')};"
+            f"tokens_per_s={st.tok_per_s:.1f};"
+            f"ttft_work_p50={st.percentile('ttft_work', 50):.1f};"
+            f"ttft_work_p95={st.percentile('ttft_work', 95):.1f};"
+            f"steps={st.steps}",
         ))
     return rows
 

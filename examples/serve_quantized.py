@@ -3,16 +3,26 @@
     PYTHONPATH=src python examples/serve_quantized.py [--mode w4a4_bsdp]
 
 Serves a small causal LM with BATCHED, continuously-scheduled requests
-through :class:`repro.serve.engine.ServeEngine` under every registered
-weight-residency format — plus a mixed per-layer ResidencySpec policy
-(BSDP for the FFN GEMVs, w8a16 attention, w8a8 default) — and reports
-per-mode throughput, resident weight bytes, cache bytes, and greedy-output
-agreement vs the bf16 reference: the serving analogue of the paper's
-Fig. 9/13 ladder.  ``--modes`` accepts format names or policy strings like
-``ffn=bsdp,default=w8a8``, optionally suffixed with a decode-cache format
-(``repro.core.kvcache.FORMATS``) as ``+kv:int4_bp`` — the last default row
-serves BSDP FFN weights against a bit-plane K/V cache, both dominant
-resident payloads quantized by their registries.
+through :class:`repro.serve.engine.ServeEngine`, exercising all **three
+serving registries** — the residency discipline applied to every resident
+concern:
+
+* weight residency (:mod:`repro.core.residency`): every registered format
+  plus a mixed per-layer ResidencySpec policy (BSDP for the FFN GEMVs,
+  w8a16 attention, w8a8 default);
+* decode-cache residency (:mod:`repro.core.kvcache`): ``--modes`` entries
+  may suffix a cache format as ``+kv:int4_bp`` — the last default row
+  serves BSDP FFN weights against a bit-plane K/V cache, both dominant
+  resident payloads quantized by their registries;
+* orchestration (:mod:`repro.serve.scheduler`): ``--scheduler`` selects the
+  admission/batching policy (fcfs | sjf | token_budget[:budget=N]) that
+  plans every step — chunked prefill, refill ordering and slot reuse are
+  policy, not engine code.
+
+Each row reports throughput, resident weight bytes, cache bytes, p50 TTFT
+(in the engine's deterministic processed-position work units, from
+``ServeEngine.stats()``) and greedy-output agreement vs the bf16
+reference: the serving analogue of the paper's Fig. 9/13 ladder.
 """
 
 import argparse
@@ -22,7 +32,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import kvcache, residency
+from repro.core import residency
 from repro.models import model as model_lib
 from repro.serve import engine
 from repro.sharding import partitioning as P
@@ -34,6 +44,9 @@ MODES = list(residency.formats()) + [MIXED, MIXED + "+kv:int4_bp"]
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--modes", nargs="*", default=MODES)
+    ap.add_argument("--scheduler", default="fcfs",
+                    help="orchestration policy (fcfs | sjf | "
+                         "token_budget[:budget=N])")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
@@ -48,14 +61,15 @@ def main():
 
     reference = None
     print(f"{'mode':<44} {'tok/s':>8} {'resident MB':>12} {'cache MB':>9} "
-          f"{'agree@1':>8}")
+          f"{'ttft p50':>9} {'agree@1':>8}")
     for entry in args.modes:
         # "mode" or "mode+kv:cache_format" — weight × cache residency
         mode, _, cache_fmt = entry.partition("+kv:")
         # residency conversion happens once, inside the engine (amortized)
         eng = engine.ServeEngine(
             params, cfg, slots=3, max_len=64, mode=mode,
-            cache_format=cache_fmt or None, min_dim=16,
+            cache_format=cache_fmt or None, scheduler=args.scheduler,
+            min_dim=16,
         )
         reqs = [eng.submit(p, args.max_new) for p in prompts]
         t0 = time.perf_counter()
@@ -71,11 +85,14 @@ def main():
                 sum(a == b for a, b in zip(o, r)) for o, r in zip(outs, reference)
             )
             agree = hits / max(sum(len(r) for r in reference), 1)
-        mb = engine.resident_bytes(eng.params) / 1e6
-        cache_mb = kvcache.cache_resident_bytes(eng.caches) / 1e6
+        st = eng.stats()
+        breakdown = eng.resident_bytes()  # registry-derived weights/cache
+        mb = breakdown["weights"] / 1e6
+        cache_mb = breakdown["cache"] / 1e6
         label = eng.mode + (f"+kv:{eng.cache_format}" if cache_fmt else "")
         print(f"{label:<44} {toks/dt:8.1f} {mb:12.2f} {cache_mb:9.3f} "
-              f"{agree:8.2f}")
+              f"{st.percentile('ttft_work', 50):9.1f} {agree:8.2f}")
+    print(f"scheduler: {eng.scheduler.describe()}")
     print("serve_quantized OK")
 
 

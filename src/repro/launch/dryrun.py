@@ -64,6 +64,7 @@ from repro.launch.mesh import (
 from repro.models import model as model_lib
 from repro.models.attention import attn_dims
 from repro.optim import adamw as optim_lib
+from repro.serve import scheduler as sched_lib
 from repro.serve.engine import QUANTIZABLE_KEYS
 from repro.sharding import partitioning as P
 from repro.train.trainstep import TrainStepConfig, make_train_step
@@ -328,6 +329,54 @@ def analytic_traffic(
     }
 
 
+#: synthetic mixed-length arrival trace for the analytic serving model:
+#: (arrival_s, prompt_tokens_frac_of_seq_len, max_new) — one long prompt
+#: co-arriving with short interactive traffic plus a late second wave.
+_SERVE_TRACE = (
+    (0.0, 1.00, 16), (0.0, 0.06, 16), (0.0, 0.08, 16), (0.0, 0.04, 16),
+    (0.0, 0.05, 16), (0.0, 0.07, 16), (0.0, 0.06, 16), (0.0, 0.05, 16),
+)
+
+
+def analytic_serving(
+    cfg: ModelConfig, cell: ShapeCell, tp: int, mesh_axes: dict,
+    qmode: str, *, min_dim: int = 64, slots: int = 4,
+    scheduler: Optional[str] = None,
+) -> dict:
+    """Scheduler-aware analytic serving model for a decode cell.
+
+    Replays the synthetic mixed-length trace through the REAL registered
+    schedulers (:func:`repro.serve.scheduler.simulate`) under a two-term
+    cost model derived from the same analytic-traffic terms as the
+    roofline: every model invocation pays the resident weight+cache HBM
+    read once (``t_call``) plus per-position activation traffic
+    (``t_token``).  This ranks orchestration policies — e.g. token_budget
+    chunked prefill vs fcfs p95 TTFT — for a 398B cell without
+    materializing a weight, the serving analogue of ``residency_qbytes``.
+    """
+    traffic = analytic_traffic(cfg, cell, tp, mesh_axes, 1, qmode,
+                               min_dim=min_dim)
+    bw = hlo_stats.HW["hbm_bw"]
+    t_call = (traffic["weight_traffic"] + traffic["cache_traffic"]) / bw
+    dways = mesh_axes.get("pod", 1) * mesh_axes.get("data", 1)
+    tokens_local = max(cell.global_batch / dways, 1.0)
+    t_token = traffic["act_traffic"] / bw / tokens_local
+    trace = [(a, max(int(f * cell.seq_len), 1), m)
+             for a, f, m in _SERVE_TRACE]
+    names = [scheduler] if scheduler else list(sched_lib.schedulers())
+    out = {}
+    for name in names:
+        st = sched_lib.simulate(
+            name, trace, slots=slots, t_call=t_call, t_token=t_token,
+            max_len=cell.seq_len + DECODE_HORIZON,
+        )
+        out[st.scheduler] = st.summary()
+    return dict(
+        t_call_s=t_call, t_token_s=t_token, slots=slots,
+        trace=[list(t) for t in trace], schedulers=out,
+    )
+
+
 def _cache_bytes_local(cfg, cell, tp, mesh_axes) -> float:
     """Per-device decode-cache bytes, derived from the cache-format
     registry: each channel's per-slot bytes come from the format's
@@ -547,6 +596,7 @@ def analyze_cell(
     mesh_shape: Optional[tuple[int, int]] = None, kv_quant: bool = False,
     cache_format: Optional[str] = None,
     moe_impl: Optional[str] = None, min_dim: int = 64,
+    scheduler: Optional[str] = None,
 ) -> dict:
     cfg = get_config(arch)
     if kv_quant:
@@ -615,6 +665,13 @@ def analyze_cell(
             / max(terms["step_lower_bound"], 1e-12),
         ),
     )
+    if cell.kind == "decode":
+        # the scheduler registry's analytic serving model: rank fcfs / sjf /
+        # token_budget TTFT+throughput for this cell's byte-derived costs
+        rec["serving_model"] = analytic_serving(
+            cfg, cell, tp, rec["mesh_shape"], qmode,
+            min_dim=min_dim, scheduler=scheduler,
+        )
     return rec
 
 
@@ -638,6 +695,11 @@ def main():
                          "repro.core.kvcache.FORMATS); decode-cell cache "
                          "inputs and analytic cache bytes both derive from "
                          "its abstract_state")
+    ap.add_argument("--scheduler", default=None,
+                    help="restrict the decode-cell analytic serving model "
+                         "to one registered scheduler (one of "
+                         f"{', '.join(sched_lib.schedulers())}; default: "
+                         "simulate all, for the policy comparison record)")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--min-dim", type=int, default=64,
                     help="residency-conversion floor: quantizable leaves "
@@ -652,6 +714,8 @@ def main():
     # validate + canonicalize the residency policy early (typos fail here,
     # not per-cell); the canonical string threads through to record tags
     args.qmode = residency.ResidencySpec.parse(args.qmode).describe()
+    if args.scheduler:
+        sched_lib.make_scheduler(args.scheduler)  # typos fail here, not per-cell
 
     from repro.configs import ARCH_NAMES
 
@@ -678,7 +742,7 @@ def main():
                     cache_format=args.cache_format,
                     microbatches=args.microbatches,
                     skip_probes=args.skip_probes or mp,
-                    min_dim=args.min_dim,
+                    min_dim=args.min_dim, scheduler=args.scheduler,
                 )
                 ok += 1
                 dom = rec.get("roofline", {}).get("dominant", "-")

@@ -3,15 +3,20 @@
 Initializes (or restores) a model, converts weights to the requested
 residency policy — the paper's one-time GEMV-V layout transform — and
 serves synthetic batched requests through the continuous-batching engine,
-reporting throughput.  ``--mode`` takes a registered format name (uniform
-residency) or a per-layer ResidencySpec string; ``--cache-format`` selects
-the decode-cache residency independently (``repro.core.kvcache.FORMATS``:
-bf16 | int8 | int4_bp), composing weight × cache residency:
+reporting throughput and SLO metrics (TTFT/TPOT percentiles from
+``ServeEngine.stats()``).  The three serving registries each get a flag:
+``--mode`` takes a registered *weight-residency* format name or a
+per-layer ResidencySpec string; ``--cache-format`` selects the
+*decode-cache* residency (``repro.core.kvcache.FORMATS``: bf16 | int8 |
+int4_bp); ``--scheduler`` selects the *orchestration* policy
+(``repro.serve.scheduler.SCHEDULERS``: fcfs | sjf | token_budget, with
+CLI kwargs like ``token_budget:budget=16``):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --mode w8a8 --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --mode 'ffn=bsdp,mixer=w8a16,default=w8a8' --cache-format int4_bp
+        --mode 'ffn=bsdp,mixer=w8a16,default=w8a8' --cache-format int4_bp \
+        --scheduler token_budget:budget=16
 """
 
 from __future__ import annotations
@@ -27,6 +32,7 @@ from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.core import kvcache, residency
 from repro.models import model as model_lib
 from repro.serve import engine
+from repro.serve import scheduler as sched_lib
 from repro.sharding import partitioning as P
 
 
@@ -42,6 +48,11 @@ def main():
                     choices=list(kvcache.formats()),
                     help="decode-cache residency format (default: the "
                          "arch config's; int4_bp = §IV bit-plane K/V)")
+    ap.add_argument("--scheduler", default="fcfs",
+                    type=sched_lib.make_scheduler,
+                    help="orchestration policy (one of "
+                         f"{', '.join(sched_lib.schedulers())}), with "
+                         "optional kwargs like 'token_budget:budget=16'")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--min-dim", type=int, default=64,
                     help="residency-conversion floor (smaller projections "
@@ -77,9 +88,10 @@ def main():
 
     eng = engine.ServeEngine(
         qparams, cfg, slots=args.slots, max_len=args.max_len,
-        cache_format=args.cache_format,
+        cache_format=args.cache_format, scheduler=args.scheduler,
     )
-    print(f"cache format: {eng.cache_format}")
+    print(f"cache format: {eng.cache_format}  "
+          f"scheduler: {eng.scheduler.describe()}")
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(
@@ -92,8 +104,17 @@ def main():
     eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in reqs)
+    st = eng.stats()
     print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)")
+
+    def ms(v):
+        return "-" if v is None else f"{v*1e3:.0f}ms"
+
+    print(f"TTFT p50/p95: {ms(st.percentile('ttft_s', 50))}/"
+          f"{ms(st.percentile('ttft_s', 95))}  "
+          f"TPOT p50: {ms(st.percentile('tpot_s', 50))}  "
+          f"(ttft_work p95: {st.percentile('ttft_work', 95):.0f} positions)")
 
 
 if __name__ == "__main__":

@@ -150,20 +150,35 @@ def gqa_prefill(params, x, cfg, *, tp, cache_len, positions=None, impl=None,
     return out, cache
 
 
-def gqa_decode(params, x, cache, cfg, *, tp, pos, impl=None):
-    """One-token decode against the ring cache.
+def _decode_positions(pos, b: int, s: int) -> jax.Array:
+    """Normalize decode positions to [B, S]: scalar / [B] broadcast, [B, S]
+    passed through (chunked prefill: per-token positions, negative = pad)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    if pos.ndim == 1:
+        pos = pos[:, None]
+    return jnp.broadcast_to(pos, (b, s))
 
-    x: [B, 1, D]; pos: scalar or per-slot [B] int32 (continuous batching)."""
-    b = x.shape[0]
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    positions = pos[:, None]
+
+def gqa_decode(params, x, cache, cfg, *, tp, pos, impl=None):
+    """Chunked decode against the ring cache.
+
+    x: [B, S, D] — S == 1 is plain continuous-batching decode; S > 1
+    appends a prompt chunk (ring-write all S tokens, then causal attention
+    of each token against the full cache — numerically the prefill
+    semantics, expressed against resident ring storage).  pos: scalar,
+    per-slot [B], or per-token [B, S] int32; negative positions are pads
+    (rope/mask-ignored, dropped from the ring scatter)."""
+    b, s, _ = x.shape
+    positions = _decode_positions(pos, b, s)
     q, k, v = _project_qkv(params, x, cfg, tp, positions, impl=impl)
     fmt = kvcache.format_for(cfg)
     cache = _ring_write(cache, k, v, positions, fmt)
     out = _decode_attention(
-        q, cache, cur=pos, window=cfg.sliding_window, fmt=fmt,
+        q, cache, cur=positions, window=cfg.sliding_window, fmt=fmt,
     )
-    out = dense(params["wo"], out.reshape(b, 1, -1), impl=impl)
+    out = dense(params["wo"], out.reshape(b, s, -1), impl=impl)
     return out, cache
 
 
@@ -211,11 +226,14 @@ def _ring_write(cache, k, v, positions, fmt):
 
 
 def _decode_attention(q, cache, *, cur, window, fmt):
-    """q: [B,1,H,D] vs the full ring cache; mask by stored positions.
+    """q: [B,S,H,D] vs the full ring cache; mask by stored positions.
 
-    cur: per-row current position [B].  When the cache L axis is sharded
-    (long-context sequence parallelism) the max/sum reductions below become
-    the flash-decoding combine.
+    cur: per-token position [B, S] (or per-row [B]); the (S, G) axes fold
+    into the cache format's single gather/group axis, so each token in a
+    chunk attends causally (``pos_ids <= its own position``) against the
+    just-written ring — S == 1 reduces bit-for-bit to single-token decode.
+    When the cache L axis is sharded (long-context sequence parallelism)
+    the max/sum reductions below become the flash-decoding combine.
 
     The score and value reads go through the cache format's ``qk``/``av``
     gather paths: quantized formats fold per-slot scales AFTER the integer
@@ -223,21 +241,26 @@ def _decode_attention(q, cache, *, cur, window, fmt):
     and the bit-plane format contracts directly on the stored planes — the
     f32 cache copy is never materialized.
     """
-    b, _, hq, dh = q.shape
+    b, s, hq, dh = q.shape
     hkv = cache["k"].shape[2]
     g = hq // hkv
-    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
-    scores = fmt.qk(qg, fmt.channel(cache, "k"))  # [B, Hkv, G, L]
+    ln = cache["pos_ids"].shape[1]
+    qg = q.reshape(b, s, hkv, g, dh).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, hkv, s * g, dh).astype(jnp.float32)
+    scores = fmt.qk(qg, fmt.channel(cache, "k"))  # [B, Hkv, S·G, L]
     scores = scores / math.sqrt(dh)
-    cur = jnp.broadcast_to(jnp.asarray(cur, jnp.int32), (b,))
+    cur = jnp.asarray(cur, jnp.int32)
+    cur = jnp.broadcast_to(cur[:, None] if cur.ndim == 1 else cur, (b, s))
     pos_ids = cache["pos_ids"]
-    valid = (pos_ids >= 0) & (pos_ids <= cur[:, None])
+    valid = (pos_ids[:, None, :] >= 0) & (pos_ids[:, None, :] <= cur[..., None])
     if window is not None:
-        valid &= pos_ids > (cur[:, None] - window)
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    w = jax.nn.softmax(scores, axis=-1)
-    out = fmt.av(w, fmt.channel(cache, "v"), dh)  # [B, Hkv, G, D]
-    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+        valid &= pos_ids[:, None, :] > (cur[..., None] - window)
+    scores = scores.reshape(b, hkv, s, g, ln)
+    scores = jnp.where(valid[:, None, :, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).reshape(b, hkv, s * g, ln)
+    out = fmt.av(w, fmt.channel(cache, "v"), dh)  # [B, Hkv, S·G, D]
+    out = out.reshape(b, hkv, s, g, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, s, hq, dh).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -444,20 +467,23 @@ def _mla_write(cache, c_kv, k_rope, positions, fmt):
 def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
     """Absorbed-form MLA decode: score and read in the latent space.
 
-    The latent cache reads route through the cache format's ``qk``/``av``
-    gathers with lead dims ``()`` — per-head absorbed queries play the role
-    of the GQA group axis — so int8 scale folding and the bit-plane
-    popcount/GEMM score path apply to the MLA latent exactly as to K/V.
+    x: [B, S, D] — S == 1 single-token decode, S > 1 appends a prompt chunk
+    (causal per-token masking against the latent ring, like
+    :func:`gqa_decode`).  The latent cache reads route through the cache
+    format's ``qk``/``av`` gathers with lead dims ``()`` — the (S, heads)
+    axes fold into the gather's group axis — so int8 scale folding and the
+    bit-plane popcount/GEMM score path apply to the MLA latent exactly as
+    to K/V.
     """
-    b = x.shape[0]
+    b, s, _ = x.shape
     hp = mla_dims(cfg, tp)
     dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    positions = pos[:, None]
-    q_nope, q_rope = _mla_q(params, x, cfg, hp, positions, impl=impl)  # [B,1,H,*]
+    positions = _decode_positions(pos, b, s)
+    q_nope, q_rope = _mla_q(params, x, cfg, hp, positions, impl=impl)  # [B,S,H,*]
     c_kv_new, k_rope_new = _mla_latent(params, x, cfg, positions, impl=impl)
     fmt = kvcache.format_for(cfg)
     cache = _mla_write(cache, c_kv_new, k_rope_new, positions, fmt)
+    ln = cache["pos_ids"].shape[1]
 
     # absorbed decode requires the float matrix; quantized residency applies
     # to the projections above, while absorption stays in the latent space.
@@ -465,20 +491,24 @@ def mla_decode(params, x, cache, cfg, *, tp=1, pos, impl=None):
     w_uv_f = _as_float(params["w_uv"], (r, hp, dv), x.dtype)
 
     q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
-                       w_uk_f.astype(jnp.float32))  # [B,1,H,r]
+                       w_uk_f.astype(jnp.float32))  # [B,S,H,r]
     store = fmt.channel(cache, "c_kv")
-    s_nope = fmt.qk(q_abs[:, 0], store)  # [B,H,L], scales folded
+    s_nope = fmt.qk(q_abs.reshape(b, s * hp, r), store)  # scales folded
+    s_nope = s_nope.reshape(b, s, hp, ln)
     krope = cache["k_rope"].astype(jnp.float32)  # [B,L,dr]
     scores = (
         s_nope
-        + jnp.einsum("bqhd,bld->bhl", q_rope.astype(jnp.float32), krope)
+        + jnp.einsum("bqhd,bld->bqhl", q_rope.astype(jnp.float32), krope)
     ) / math.sqrt(dn + dr)
-    valid = (cache["pos_ids"] >= 0) & (cache["pos_ids"] <= pos[:, None])
-    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    pos_ids = cache["pos_ids"]
+    valid = (pos_ids[:, None, :] >= 0) & (
+        pos_ids[:, None, :] <= positions[..., None])  # [B,S,L]
+    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
-    ctx_lat = fmt.av(w, store, r)[:, None]  # [B,1,H,r]
+    ctx_lat = fmt.av(w.reshape(b, s * hp, ln), store, r)
+    ctx_lat = ctx_lat.reshape(b, s, hp, r)
     out = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, w_uv_f.astype(jnp.float32))
-    out = dense(params["wo"], out.reshape(b, 1, hp * dv).astype(x.dtype), impl=impl)
+    out = dense(params["wo"], out.reshape(b, s, hp * dv).astype(x.dtype), impl=impl)
     return out, cache
 
 

@@ -205,10 +205,15 @@ def decode_step(
     params, token: jax.Array, caches, pos, cfg, *, tp=1, rules=None, impl=None,
     probe=False,
 ):
-    """One decode step. token: [B,1] int32; pos: scalar or per-slot [B]
-    int32 (the position of this token; per-slot for continuous batching).
+    """One decode step. token: [B,S] int32 — S == 1 is plain continuous-
+    batching decode; S > 1 appends a prompt *chunk* against the caches
+    (chunked prefill: ring-write all S tokens, causal per-token masking).
+    pos: scalar, per-slot [B], or per-token [B,S] int32; negative positions
+    mark pad tokens (rope/mask-ignored, dropped from the ring scatter).
     Cross-attention context is read from the caches."""
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (token.shape[0],))
+    from repro.models.attention import _decode_positions
+
+    pos = _decode_positions(pos, token.shape[0], token.shape[1])
     x, new_caches, _ = _decoder_forward(
         params, token, cfg, tp=tp, mode="decode", cache=caches, pos=pos,
         rules=rules, impl=impl, probe=probe,

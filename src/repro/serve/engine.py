@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + decode with quantized residency.
+"""Serving engine: scheduler-driven continuous batching over three registries.
 
 The paper's GEMV-V scenario as a service: weights are converted once to a
 quantized residency mode (``convert_params``), stay device-resident, and
@@ -7,24 +7,38 @@ every request runs prefill + N decode steps against them.  Per the paper's
 convert time; the per-request activation quantization is fused in the
 kernels.
 
-Residency is two-dimensional: ``mode`` selects the *weight* policy
-(:mod:`repro.core.residency`) and ``cache_format`` the *decode-cache*
-format (:mod:`repro.core.kvcache` — ``"bf16"``, ``"int8"``, or the §IV
-bit-plane ``"int4_bp"``), so e.g. BSDP FFN weights can serve against an
-int4 bit-plane KV cache — the two largest resident payloads shrunk by the
-same registry discipline.
+Residency is governed by **three registries**, one per resident concern:
 
-``ServeEngine`` also implements continuous batched decode: requests of
-different lengths share one ring-cache batch; finished slots are refilled
-by new prompts without stopping the decode loop.  All refills queued in
-one ``step`` run as ONE microbatched prefill call (left-padded, negative
-positions masked) instead of batch=1 per slot, flattening refill latency
-under heavy traffic.
+* ``mode``          — *weight* residency (:mod:`repro.core.residency`):
+                      which layout each parameter tree leaf serves from.
+* ``cache_format``  — *decode-cache* residency (:mod:`repro.core.kvcache`):
+                      how K/V (and the MLA latent) slots are stored/read.
+* ``scheduler``     — *host-side orchestration*
+                      (:mod:`repro.serve.scheduler`): which requests batch
+                      together, when refills run, how prefill work is
+                      chunked against decode latency.
+
+so e.g. ``ServeEngine(mode={"ffn": "bsdp"}, cache_format="int4_bp",
+scheduler="token_budget")`` serves both dominant resident payloads
+bit-plane-resident while chunking long prompts so queued requests' TTFT
+never stalls behind a monolithic prefill.
+
+``ServeEngine`` implements continuous batched decode: requests of different
+lengths share one ring-cache batch; finished (or cancelled) slots are
+refilled by new prompts without stopping the decode loop.  Each ``step()``
+is ``scheduler.plan(EngineView) → _execute(StepPlan)``: all refills in the
+plan run as ONE microbatched prefill call (left-padded, negative positions
+masked), and chunk rows + decode rows share one chunked-decode invocation.
+Requests are lifecycle objects (``QUEUED → PREFILLING → DECODING → DONE |
+CANCELLED``) with per-token streaming callbacks and three-clock SLO stamps
+(wall seconds / engine steps / processed-position work units) surfaced by
+:meth:`ServeEngine.stats`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -33,6 +47,18 @@ import numpy as np
 
 from repro.core import kvcache, qlinear, residency
 from repro.models import model as model_lib
+from repro.serve import scheduler as sched_lib
+from repro.serve.scheduler import (
+    CANCELLED,
+    DECODING,
+    DONE,
+    PREFILLING,
+    QUEUED,
+    EngineStats,
+    EngineView,
+    Stamp,
+    StepPlan,
+)
 
 # Parameter-tree paths (leaf dict keys) eligible for quantized residency.
 QUANTIZABLE_KEYS = (
@@ -97,25 +123,73 @@ def _convert_leaf(w, mode, min_dim):
 
 
 def resident_bytes(params) -> int:
-    """Total device-resident weight bytes (roofline memory-term input)."""
+    """Total device-resident weight bytes (roofline memory-term input).
+
+    Quantized leaves are byte-counted by their registered format's
+    ``resident_bytes`` (payload + scales) and float leaves by their array
+    size — the same registry accounting the dry-run's ``abstract_quant``
+    walk uses, so the two cannot drift.
+    """
     total = 0
-    for leaf in jax.tree_util.tree_leaves(params):
-        total += leaf.size * leaf.dtype.itemsize
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, residency.QuantLinearState)
+    ):
+        if isinstance(leaf, residency.QuantLinearState):
+            total += residency.get_format(leaf.mode).resident_bytes(leaf)
+        else:
+            total += leaf.size * leaf.dtype.itemsize
     return total
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity equality: queue membership
 class Request:
-    uid: int
-    prompt: np.ndarray  # [P] int32
-    max_new: int
+    """One serving request as a lifecycle object.
+
+    ``Request(uid, prompt, max_new)`` keeps working positionally (legacy
+    construction); ``uid=None`` is auto-assigned at ``submit`` time.
+    ``state`` walks ``QUEUED → PREFILLING → DECODING → DONE``; ``cancel()``
+    moves any non-terminal state to ``CANCELLED`` and the engine frees the
+    slot at its next step.  ``on_token(req, tok)`` streams every emitted
+    token; ``arrival``/``first_token``/``finished`` are three-clock
+    :class:`~repro.serve.scheduler.Stamp` records (TTFT/TPOT inputs).
+    """
+
+    uid: Optional[int] = None
+    prompt: np.ndarray = None  # [P] int32
+    max_new: int = 0
     out: list = dataclasses.field(default_factory=list)
-    done: bool = False
     #: optional teacher-forced continuation — when set, decode feeds these
     #: tokens instead of argmax sampling.  Used for residency-mode logit
     #: regression (identical token stream across modes) and speculative
     #: verification.
     force: Optional[np.ndarray] = None
+    state: str = QUEUED
+    #: prompt tokens already consumed (== len(prompt) once DECODING)
+    prefilled: int = 0
+    on_token: Optional[Callable[["Request", int], None]] = None
+    arrival: Optional[Stamp] = None
+    first_token: Optional[Stamp] = None
+    finished: Optional[Stamp] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        """Legacy flag: terminal state (DONE or CANCELLED)."""
+        return self.state in (DONE, CANCELLED)
+
+    @done.setter
+    def done(self, value: bool) -> None:  # legacy writers
+        if value:
+            self.state = DONE
+
+    def cancel(self) -> None:
+        """Cancel the request; the engine frees its slot at the next step
+        (a queued request is dropped before ever taking a slot)."""
+        if self.state not in (DONE, CANCELLED):
+            self.state = CANCELLED
 
 
 class ServeEngine:
@@ -126,19 +200,18 @@ class ServeEngine:
     ResidencySpec` form (policy dict / ``"pat=fmt,..."`` string).
     Parameters are converted ONCE at engine construction — the paper's
     amortized layout transform — and every prefill and multi-slot decode
-    step thereafter runs through each layer's format.  ``mode="bsdp"``
-    serves the whole continuous-batching traffic through bit-plane weights
-    (the format's KernelPolicy routes batched prefill and multi-slot decode
-    to the plane-pair GEMM kernel, single-token traffic to the popcount
-    GEMV kernel); a mixed policy like ``{"ffn": "bsdp", "mixer": "w8a16"}``
-    keeps BSDP for the giant FFN GEMVs and w8a16 elsewhere.
+    step thereafter runs through each layer's format.
 
     ``cache_format`` independently selects the decode-cache residency — a
     name registered in :data:`repro.core.kvcache.FORMATS` (``"bf16"``,
     ``"int8"``, ``"int4_bp"``).  Cache splice and refill operate on the
-    quantized storage; weight and cache residency compose freely
-    (``mode={"ffn": "bsdp"}, cache_format="int4_bp"`` serves both dominant
-    payloads bit-plane-resident).
+    quantized storage; weight and cache residency compose freely.
+
+    ``scheduler`` selects the orchestration policy — anything
+    :func:`repro.serve.scheduler.make_scheduler` accepts (a registered name
+    like ``"fcfs"``/``"sjf"``/``"token_budget"``, a CLI string with kwargs
+    ``"token_budget:budget=16"``, a Scheduler class or instance).  The
+    default ``"fcfs"`` reproduces the legacy FIFO loop bit-exactly.
     """
 
     def __init__(
@@ -153,8 +226,10 @@ class ServeEngine:
         impl: Optional[str] = "jnp",
         mode: residency.SpecLike = "bf16",
         cache_format: Optional[str] = None,
+        scheduler: sched_lib.SchedulerLike = "fcfs",
         min_dim: int = 64,
         trace_logits: bool = False,
+        clock: Callable[[], float] = time.perf_counter,
     ):
         spec = residency.ResidencySpec.parse(mode)
         if not spec.is_trivial:
@@ -166,22 +241,33 @@ class ServeEngine:
         self.spec = spec
         self.mode = spec.describe()
         self.cache_format = kvcache.format_for(cfg).name
+        self.scheduler = sched_lib.make_scheduler(scheduler)
         self.trace_logits = trace_logits
         #: when ``trace_logits``: [(kind, slots, np.ndarray logits)] in
         #: execution order — ("prefill", (slot,), [vocab]) and
-        #: ("decode", live_slots, [n_live, vocab]) entries.
+        #: ("decode", live_slots, [n_live, vocab]) entries (a chunked
+        #: request's first-token logits also record as "prefill").
         self.logit_trace: list = []
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
+        self.requests: list[Request] = []  # every admitted request, in order
         self.caches = None
         # np.int32 to match the jnp.int32 positions at the decode boundary
         self.pos = np.zeros(slots, np.int32)
-        # left-padded microbatched refill needs position-aware layers only;
-        # SSM state would absorb pad tokens, so hybrids refill one by one
+        # left-padded microbatched refill / chunked prefill need
+        # position-aware layers only; SSM state would absorb pad tokens,
+        # so hybrids refill one by one and never chunk
         self._pad_ok = all(
             cfg.mixer_kind(i) in ("attn", "attn_cross", "cross")
             for i in range(cfg.n_layers)
         )
+        self._clock = clock
+        self._next_uid = 0
+        self._uids: set = set()
+        self.step_index = 0
+        self.work = 0          # processed batch positions (analytic clock)
+        self.wall_s = 0.0      # seconds spent inside step()
+        self._total_tokens = 0
 
         self._decode = jax.jit(
             lambda p, tok, caches, pos: model_lib.decode_step(
@@ -189,15 +275,53 @@ class ServeEngine:
             )
         )
 
+    # -- admission ------------------------------------------------------
     def submit(
-        self, prompt: np.ndarray, max_new: int, *, force: Optional[np.ndarray] = None
+        self,
+        prompt,
+        max_new: int = 0,
+        *,
+        uid: Optional[int] = None,
+        force: Optional[np.ndarray] = None,
+        on_token: Optional[Callable] = None,
     ) -> Request:
-        r = Request(
-            uid=len(self.queue), prompt=np.asarray(prompt), max_new=max_new,
-            force=None if force is None else np.asarray(force),
+        """Admit one request (legacy ``submit(prompt, max_new)`` pattern, or
+        pass a pre-built :class:`Request` as ``prompt``).  Auto-assigns
+        ``uid`` when omitted; duplicate uids are rejected at admit time
+        (a duplicate would silently corrupt slot accounting)."""
+        if isinstance(prompt, Request):
+            req = prompt
+        else:
+            req = Request(
+                uid=uid, prompt=np.asarray(prompt), max_new=max_new,
+                force=None if force is None else np.asarray(force),
+                on_token=on_token,
+            )
+        if req.uid is None:
+            while self._next_uid in self._uids:
+                self._next_uid += 1
+            req.uid = self._next_uid
+        if req.uid in self._uids:
+            raise ValueError(f"duplicate request uid {req.uid!r}")
+        self.scheduler.admit(req, self._view())  # may raise → rejected
+        self._uids.add(req.uid)
+        self._next_uid = max(self._next_uid, req.uid) + 1
+        req.state = QUEUED
+        req.arrival = self._stamp()
+        self.queue.append(req)
+        self.requests.append(req)
+        return req
+
+    # -- bookkeeping helpers --------------------------------------------
+    def _stamp(self) -> Stamp:
+        return Stamp(self._clock(), self.step_index, self.work)
+
+    def _view(self) -> EngineView:
+        return EngineView(
+            slots=self.slots, active=tuple(self.active),
+            queue=tuple(self.queue), chunking_ok=self._pad_ok,
+            max_len=self.max_len, step_index=self.step_index,
         )
-        self.queue.append(r)
-        return r
 
     @staticmethod
     def _next_token(req: Request, logits_row: np.ndarray) -> int:
@@ -206,8 +330,45 @@ class ServeEngine:
             return int(req.force[i])
         return int(np.argmax(logits_row))
 
-    def _prefill_slots(self, assignments: list[tuple[int, "Request"]]):
+    def _emit(self, req: Request, logits_row: np.ndarray) -> None:
+        tok = self._next_token(req, logits_row)
+        req.out.append(tok)
+        self._total_tokens += 1
+        if req.first_token is None:
+            req.first_token = self._stamp()
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
+    def _finish(self, req: Request, slot: Optional[int], state: str) -> None:
+        req.state = state
+        req.finished = self._stamp()
+        if slot is not None:
+            self.active[slot] = None
+        self.scheduler.on_complete(req, self._view())
+
+    def _sweep_terminal(self) -> None:
+        """Free slots/queue entries whose requests were moved to a terminal
+        state from outside the engine (``cancel()``, or a legacy writer
+        setting ``done = True`` mid-flight)."""
+        for req in list(self.queue):
+            if req.state in (CANCELLED, DONE):
+                self.queue.remove(req)
+                self._finish(req, None, req.state)
+        for slot in range(self.slots):
+            req = self.active[slot]
+            if req is not None and req.state in (CANCELLED, DONE):
+                # mid-decode cancel/stop: the slot frees NOW; its ring-cache
+                # row is overwritten wholesale by the next refill splice
+                self._finish(req, slot, req.state)
+
+    # -- execution ------------------------------------------------------
+    def _prefill_slots(self, assignments: list[tuple[int, Request, int]]):
         """Microbatched refill: ONE prefill call for every queued refill.
+
+        ``assignments`` rows are ``(slot, request, n_tokens)`` —
+        ``n_tokens == len(prompt)`` for whole-prompt refills, less for a
+        chunking scheduler's first chunk (the request stays PREFILLING and
+        advances through the chunked-decode path on later steps).
 
         Prompts of different lengths are left-padded; pad tokens carry
         negative positions, which rope/masking ignore and the ring caches
@@ -216,13 +377,13 @@ class ServeEngine:
         quantized storage throughout: splice and refill never materialize a
         float cache).
         """
-        lens = [len(req.prompt) for _, req in assignments]
+        lens = [n for _, _, n in assignments]
         s_max = max(lens)
         toks = np.zeros((len(assignments), s_max), np.int32)
         pos = np.zeros((len(assignments), s_max), np.int32)
-        for i, (_, req) in enumerate(assignments):
-            pad = s_max - len(req.prompt)
-            toks[i, pad:] = req.prompt
+        for i, (_, req, n) in enumerate(assignments):
+            pad = s_max - n
+            toks[i, pad:] = req.prompt[:n]
             pos[i] = np.arange(s_max, dtype=np.int32) - pad
         batch = {"tokens": jnp.asarray(toks)}
         if s_max != min(lens):
@@ -231,6 +392,7 @@ class ServeEngine:
             self.params, batch, self.cfg, tp=self.tp,
             max_len=self.max_len, rules=self.rules, impl=self.impl,
         )
+        self.work += toks.size
         if self.caches is None:
             # first refill: allocate zeros at the full slot-batch shape
             # directly (no slots× temporary from a concatenate broadcast)
@@ -242,7 +404,7 @@ class ServeEngine:
             )
         # one scatter per leaf splices ALL refilled rows at once (row i of
         # the prefill batch → slot assignments[i][0]) — no per-slot copy
-        slot_ids = jnp.array([slot for slot, _ in assignments], jnp.int32)
+        slot_ids = jnp.array([slot for slot, _, _ in assignments], jnp.int32)
         self.caches = _tree_batched_pair(
             self.caches, cache_b,
             lambda full, rows, axis: (
@@ -251,52 +413,139 @@ class ServeEngine:
             ),
         )
         last_logits = np.asarray(logits[:, -1])
-        for i, (slot, req) in enumerate(assignments):
-            if self.trace_logits:
-                self.logit_trace.append(("prefill", (slot,), last_logits[i]))
-            req.out.append(self._next_token(req, last_logits[i]))
-            self.pos[slot] = len(req.prompt)
+        for i, (slot, req, n) in enumerate(assignments):
             self.active[slot] = req
+            self.pos[slot] = n
+            req.prefilled = n
+            if n == len(req.prompt):
+                req.state = DECODING
+                if self.trace_logits:
+                    self.logit_trace.append(("prefill", (slot,), last_logits[i]))
+                self._emit(req, last_logits[i])
+            else:
+                req.state = PREFILLING  # chunk logits are partial: discard
 
-    def step(self):
-        """Refill empty slots, then one decode step for the whole batch."""
+    def _chunk_decode(self, chunks, decode_slots):
+        """One model invocation for this step's chunk rows + decode rows.
+
+        Rows are right-aligned in a ``[slots, S]`` token block (``S`` = the
+        longest chunk, 1 when no chunks): a chunk row carries its next
+        prompt tokens at positions ``prefilled..prefilled+n``, a decode row
+        its last output token at ``pos[slot]``, and everything else pads
+        with negative positions (rope/mask-ignored, dropped from the ring
+        scatter).  Rows are batch-independent through every layer, so mixed
+        chunk+decode batches are numerically identical to running them
+        separately.
+        """
+        s_len = max([n for _, n in chunks], default=1)
+        toks = np.zeros((self.slots, s_len), np.int32)
+        pos = np.full((self.slots, s_len), -1, np.int32)
+        for slot, n in chunks:
+            req = self.active[slot]
+            a = req.prefilled
+            toks[slot, s_len - n:] = req.prompt[a:a + n]
+            pos[slot, s_len - n:] = np.arange(a, a + n, dtype=np.int32)
+        for slot in decode_slots:
+            toks[slot, -1] = self.active[slot].out[-1]
+            pos[slot, -1] = self.pos[slot]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(pos)
+        )
+        self.work += toks.size
+        step_logits = np.asarray(logits[:, -1])
+        for slot, n in chunks:
+            req = self.active[slot]
+            req.prefilled += n
+            self.pos[slot] = req.prefilled
+            if req.prefilled >= len(req.prompt):
+                req.state = DECODING  # last chunk: its logits ARE the TTFT
+                if self.trace_logits:
+                    self.logit_trace.append(("prefill", (slot,), step_logits[slot]))
+                self._emit(req, step_logits[slot])
+        if decode_slots and self.trace_logits:
+            self.logit_trace.append(
+                ("decode", tuple(decode_slots), step_logits[list(decode_slots)])
+            )
+        for slot in decode_slots:
+            req = self.active[slot]
+            self._emit(req, step_logits[slot])
+            self.pos[slot] += 1
+            if len(req.out) >= req.max_new:
+                self._finish(req, slot, DONE)
+
+    def _execute(self, plan: StepPlan) -> bool:
+        """Run one validated :class:`StepPlan`; returns progress."""
         refills = []
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                refills.append((s, self.queue.pop(0)))
+        for slot, req, n in plan.refills:
+            if self.active[slot] is not None:
+                raise ValueError(f"plan refills occupied slot {slot}")
+            if req not in self.queue:
+                raise ValueError(f"plan refills unqueued request {req.uid}")
+            self.queue.remove(req)
+            refills.append((slot, req, min(n, len(req.prompt))))
         if refills:
             if self._pad_ok:
                 self._prefill_slots(refills)
             else:  # SSM state cannot skip pad tokens: refill per slot
-                for s, req in refills:
-                    self._prefill_slots([(s, req)])
-        live = [s for s in range(self.slots) if self.active[s] is not None]
-        if not live:
-            return False
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s in live:
-            toks[s, 0] = self.active[s].out[-1]
-        # per-slot decode positions (continuous batching): each row's token
-        # is rope'd and ring-written at its own position; dead slots carry
-        # stale positions but their rows are overwritten at refill
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches, jnp.asarray(self.pos)
+                for one in refills:
+                    self._prefill_slots([one])
+        chunks = [
+            (slot, min(n, self.active[slot].prompt_len
+                       - self.active[slot].prefilled))
+            for slot, n in plan.chunks
+            if self.active[slot] is not None
+            and self.active[slot].state == PREFILLING and n > 0
+        ]
+        decode_slots = tuple(
+            s for s in plan.decode
+            if self.active[s] is not None and self.active[s].state == DECODING
         )
-        step_logits = np.asarray(logits[:, 0])
-        if self.trace_logits:
-            self.logit_trace.append(("decode", tuple(live), step_logits[live]))
-        for s in live:
-            r = self.active[s]
-            r.out.append(self._next_token(r, step_logits[s]))
-            self.pos[s] += 1
-            if len(r.out) >= r.max_new:
-                r.done = True
-                self.active[s] = None
-        return True
+        if chunks or decode_slots:
+            self._chunk_decode(chunks, decode_slots)
+        return bool(refills or chunks or decode_slots)
+
+    def step(self) -> bool:
+        """One scheduler-planned step; False when no progress was possible
+        (empty queue and no live slots — or a scheduler that planned no
+        work while work exists, which ``run()`` treats as termination)."""
+        t0 = self._clock()
+        self._sweep_terminal()
+        plan = self.scheduler.plan(self._view())
+        progressed = self._execute(plan)
+        self.step_index += 1
+        self.wall_s += self._clock() - t0
+        return progressed
 
     def run(self):
         while self.step():
             pass
+
+    # -- SLO surface ----------------------------------------------------
+    def stats(self) -> EngineStats:
+        """Per-request TTFT/TPOT + aggregate tok/s (see
+        :class:`repro.serve.scheduler.EngineStats`)."""
+        return EngineStats(
+            scheduler=self.scheduler.describe(),
+            requests=tuple(
+                sched_lib.request_stats(r) for r in self.requests
+            ),
+            total_tokens=self._total_tokens,
+            wall_s=self.wall_s,
+            work=self.work,
+            steps=self.step_index,
+        )
+
+    def resident_bytes(self) -> dict:
+        """Registry-derived resident-byte breakdown: weight bytes from each
+        leaf's :class:`~repro.core.residency.ResidencyFormat` and cache
+        bytes from the live ring caches — the serving-side numbers the
+        dry-run's ``abstract_quant`` / ``eval_shape(init_cache)`` twins
+        must (and are tested to) reproduce exactly."""
+        weights = resident_bytes(self.params)
+        cache = 0 if self.caches is None else kvcache.cache_resident_bytes(
+            self.caches)
+        return {"weights": weights, "cache": cache,
+                "total": weights + cache}
 
 
 def _tree_batched(caches, fn):

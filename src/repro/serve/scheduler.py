@@ -1,0 +1,519 @@
+"""Scheduler registry: host-side serving orchestration as data, not code.
+
+The paper's §IV-B amortization argument says the layout transform is paid
+once and every subsequent request serves from resident weights; at system
+scale the same argument moves up one level — once weights and caches are
+resident, throughput is won or lost in *host-side orchestration*: which
+requests batch together, when refills run, how prefill work is chunked
+against decode latency.  This module makes that choice **data instead of
+code**, exactly like :mod:`repro.core.residency` (weights) and
+:mod:`repro.core.kvcache` (decode caches): every admission/batching policy
+is a :class:`Scheduler` registered by name, and :class:`~repro.serve.
+engine.ServeEngine` asks the registry instead of hard-coding a FIFO loop.
+
+A scheduler owns the per-step orchestration decision:
+
+``admit(req, view)``   admission hook (raise to reject; reorder bookkeeping)
+``plan(view)``         :class:`EngineView` → :class:`StepPlan` — which free
+                       slots refill (and with how many prompt tokens),
+                       which PREFILLING slots advance a chunk, which live
+                       slots decode one token
+``on_complete(req, view)``  completion hook (stats, priority bookkeeping)
+
+Shipped schedulers:
+
+* ``fcfs``         — first-come-first-served whole-prompt refill: today's
+                     engine behavior, bit-exact (the back-compat default).
+* ``sjf``          — shortest-prompt-first refill ordering: long prompts
+                     never push short ones out of a refill batch.
+* ``token_budget`` — chunked prefill: each slot prefills at most ``budget``
+                     prompt tokens per step, so a 4k-token prompt advances
+                     in budgeted chunks *interleaved with decode steps*
+                     instead of stalling every co-scheduled request's TTFT
+                     behind one monolithic prefill (expressible because the
+                     ring caches accept arbitrary per-token positions and
+                     drop negative pads — the PR 3 ``positions`` override).
+
+Registering a new policy is ~10 lines::
+
+    class PriorityScheduler(FCFSScheduler):
+        name = "priority"
+        def plan(self, view):
+            view = dataclasses.replace(
+                view, queue=tuple(sorted(view.queue, key=lambda r: -r.priority))
+            )
+            return super().plan(view)
+
+    register_scheduler(PriorityScheduler)
+
+after which ``ServeEngine(scheduler="priority")``, ``launch/serve.py
+--scheduler`` and the dry-run's analytic serving model all work with no
+call-site edits.
+
+The module also hosts the request lifecycle vocabulary (``QUEUED →
+PREFILLING → DECODING → DONE | CANCELLED``), the :class:`EngineStats` SLO
+surface (per-request TTFT/TPOT + aggregate tok/s) and :func:`simulate` —
+an analytic replay of an arrival trace through a *real* scheduler under a
+bytes-derived cost model, which is what lets ``launch/dryrun.py`` rank
+schedulers for a 398B decode cell without materializing a weight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Sequence, Union
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Request lifecycle states
+# ---------------------------------------------------------------------------
+
+QUEUED = "queued"          # admitted, waiting for a slot
+PREFILLING = "prefilling"  # holds a slot; prompt partially consumed (chunked)
+DECODING = "decoding"      # holds a slot; emitting tokens
+DONE = "done"              # finished normally (max_new reached)
+CANCELLED = "cancelled"    # cancelled by the client; slot freed at next step
+
+STATES = (QUEUED, PREFILLING, DECODING, DONE, CANCELLED)
+
+
+class Stamp(NamedTuple):
+    """One lifecycle event in three clocks: wall seconds, engine steps, and
+    processed-position work units (the deterministic analytic clock — every
+    padded batch position a model invocation runs counts one unit)."""
+
+    time: float
+    step: int
+    work: int
+
+
+# ---------------------------------------------------------------------------
+# Plan vocabulary
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """One engine step, as decided by a scheduler.
+
+    ``refills``: ``(slot, request, n_tokens)`` — place a queued request into
+    a free slot and prefill its first ``n_tokens`` prompt tokens (the whole
+    prompt for non-chunking schedulers).  All refills in one plan run as ONE
+    microbatched prefill call.
+
+    ``chunks``: ``(slot, n_tokens)`` — advance a PREFILLING slot by the next
+    ``n_tokens`` prompt tokens through the chunked-decode path (ring-append
+    + causal attention against the slot's own cache).
+
+    ``decode``: slots that decode one token.  Chunk rows and decode rows
+    share one model invocation per step.
+    """
+
+    refills: tuple = ()
+    chunks: tuple = ()
+    decode: tuple = ()
+
+    @property
+    def is_empty(self) -> bool:
+        return not (self.refills or self.chunks or self.decode)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineView:
+    """Read-only engine snapshot handed to ``plan()``.
+
+    ``active`` holds the per-slot request objects (``None`` = free slot);
+    schedulers read only the lifecycle surface: ``state``, ``prompt_len``,
+    ``prefilled``, ``max_new``, ``uid``.  ``chunking_ok`` is False for
+    architectures whose recurrent state cannot skip pad tokens (SSM
+    hybrids) — chunking schedulers must fall back to whole-prompt refills.
+    """
+
+    slots: int
+    active: tuple
+    queue: tuple
+    chunking_ok: bool = True
+    max_len: int = 0
+    step_index: int = 0
+
+    def free_slots(self) -> tuple:
+        return tuple(s for s in range(self.slots) if self.active[s] is None)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler protocol + registry
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Base class / protocol for one admission+batching policy.
+
+    ``plan`` must schedule *some* progress whenever work exists (a queued
+    request with a free slot, a PREFILLING slot, or a live decode) — the
+    engine stops when a plan makes no progress.
+    """
+
+    name: str = ""
+
+    def admit(self, req, view: EngineView) -> None:
+        """Admission hook; raise to reject (the engine propagates)."""
+
+    def plan(self, view: EngineView) -> StepPlan:
+        raise NotImplementedError
+
+    def on_complete(self, req, view: EngineView) -> None:
+        """Called once per request reaching DONE or CANCELLED."""
+
+    def describe(self) -> str:
+        return self.name
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<Scheduler {self.describe()!r}>"
+
+
+SCHEDULERS: dict[str, Callable[..., Scheduler]] = {}
+
+SchedulerLike = Union[Scheduler, str, type, None]
+
+
+def register_scheduler(factory: Callable[..., Scheduler]) -> Callable:
+    """Register a scheduler class/factory under its ``name`` attribute."""
+    name = getattr(factory, "name", "")
+    if not name:
+        raise ValueError("scheduler must set a non-empty .name")
+    SCHEDULERS[name] = factory
+    return factory
+
+
+def schedulers() -> tuple[str, ...]:
+    """Registered scheduler names, in registration order."""
+    return tuple(SCHEDULERS)
+
+
+def make_scheduler(spec: SchedulerLike) -> Scheduler:
+    """Resolve a scheduler: an instance (as-is), a class (instantiated), a
+    registered name, or a CLI string ``"name:key=val,..."`` with int-parsed
+    kwargs (``"token_budget:budget=16"``)."""
+    if spec is None:
+        spec = "fcfs"
+    if isinstance(spec, Scheduler):
+        return spec
+    if isinstance(spec, type):
+        return spec()
+    name, _, argstr = spec.partition(":")
+    if name not in SCHEDULERS:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered: {schedulers()}"
+        )
+    kwargs = {}
+    for entry in filter(None, (e.strip() for e in argstr.split(","))):
+        key, _, val = entry.partition("=")
+        if not val:
+            raise ValueError(f"bad scheduler arg {entry!r}")
+        kwargs[key] = int(val) if val.lstrip("-").isdigit() else val
+    return SCHEDULERS[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# The three seed schedulers
+# ---------------------------------------------------------------------------
+
+
+class FCFSScheduler(Scheduler):
+    """First-come-first-served whole-prompt refill — the legacy engine loop
+    (refill free slots from the queue head, then decode every live slot,
+    including the slots refilled this step), bit-exact."""
+
+    name = "fcfs"
+
+    def _ordered_queue(self, view: EngineView) -> list:
+        return list(view.queue)
+
+    def plan(self, view: EngineView) -> StepPlan:
+        queue = self._ordered_queue(view)
+        refills = []
+        for slot in view.free_slots():
+            if not queue:
+                break
+            req = queue.pop(0)
+            refills.append((slot, req, req.prompt_len))
+        decode = tuple(
+            s for s in range(view.slots)
+            if (view.active[s] is not None and view.active[s].state == DECODING)
+            or any(slot == s and n == req.prompt_len
+                   for slot, req, n in refills)
+        )
+        return StepPlan(refills=tuple(refills), decode=decode)
+
+
+class SJFScheduler(FCFSScheduler):
+    """Shortest-prompt-first refill ordering (stable on ties, so equal-length
+    prompts keep arrival order): a long prompt never pads every co-refilled
+    short prompt up to its own length in the microbatched prefill."""
+
+    name = "sjf"
+
+    def _ordered_queue(self, view: EngineView) -> list:
+        return sorted(view.queue, key=lambda r: r.prompt_len)
+
+
+class TokenBudgetScheduler(FCFSScheduler):
+    """Chunked prefill: at most ``budget`` prompt tokens per slot per step.
+
+    Long prompts advance in budgeted chunks through the decode path
+    (ring-append + causal attention against the slot's own cache) while the
+    other slots keep decoding in the same model invocation — so the TTFT of
+    co-scheduled requests is bounded by ``budget``, not by the longest
+    queued prompt.  The chunked request's own first token arrives when its
+    last chunk lands (it trades a little of its own TTFT for everyone
+    else's).  Falls back to whole-prompt fcfs when the architecture cannot
+    chunk (``view.chunking_ok`` False: SSM state would absorb pad tokens).
+    """
+
+    name = "token_budget"
+
+    def __init__(self, budget: int = 32):
+        if budget < 1:
+            raise ValueError("token_budget needs budget >= 1")
+        self.budget = budget
+
+    def describe(self) -> str:
+        return f"{self.name}:budget={self.budget}"
+
+    def plan(self, view: EngineView) -> StepPlan:
+        if not view.chunking_ok:
+            return super().plan(view)
+        budget = self.budget
+        if view.max_len:
+            budget = min(budget, view.max_len)
+        chunks = []
+        for slot in range(view.slots):
+            req = view.active[slot]
+            if req is not None and req.state == PREFILLING:
+                chunks.append(
+                    (slot, min(budget, req.prompt_len - req.prefilled))
+                )
+        queue = list(view.queue)
+        refills = []
+        for slot in view.free_slots():
+            if not queue:
+                break
+            req = queue.pop(0)
+            refills.append((slot, req, min(budget, req.prompt_len)))
+        decode = tuple(
+            s for s in range(view.slots)
+            if (view.active[s] is not None and view.active[s].state == DECODING)
+            or any(slot == s and n == req.prompt_len
+                   for slot, req, n in refills)
+        )
+        return StepPlan(refills=tuple(refills), chunks=tuple(chunks),
+                        decode=decode)
+
+
+register_scheduler(FCFSScheduler)
+register_scheduler(SJFScheduler)
+register_scheduler(TokenBudgetScheduler)
+
+
+# ---------------------------------------------------------------------------
+# SLO metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Per-request SLO record, in all three clocks (see :class:`Stamp`)."""
+
+    uid: int
+    state: str
+    prompt_len: int
+    new_tokens: int
+    ttft_s: Optional[float] = None     # arrival → first token, seconds
+    ttft_steps: Optional[int] = None   # ... in engine steps
+    ttft_work: Optional[int] = None    # ... in processed-position units
+    tpot_s: Optional[float] = None     # mean seconds per token after the 1st
+    e2e_s: Optional[float] = None      # arrival → finish, seconds
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Aggregate serving statistics surfaced by ``ServeEngine.stats()``."""
+
+    scheduler: str
+    requests: tuple  # RequestStats, submission order
+    total_tokens: int
+    wall_s: float
+    work: int
+    steps: int
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    def percentile(self, field: str, q: float) -> Optional[float]:
+        """q-th percentile (0..100) of a RequestStats field over the
+        requests that recorded it (e.g. ``percentile("ttft_work", 95)``)."""
+        vals = [getattr(r, field) for r in self.requests
+                if getattr(r, field) is not None]
+        if not vals:
+            return None
+        return float(np.percentile(np.asarray(vals, np.float64), q))
+
+    def summary(self) -> dict:
+        return {
+            "scheduler": self.scheduler,
+            "requests": len(self.requests),
+            "tokens": self.total_tokens,
+            "tok_per_s": self.tok_per_s,
+            "ttft_s_p50": self.percentile("ttft_s", 50),
+            "ttft_s_p95": self.percentile("ttft_s", 95),
+            "ttft_work_p50": self.percentile("ttft_work", 50),
+            "ttft_work_p95": self.percentile("ttft_work", 95),
+            "tpot_s_p50": self.percentile("tpot_s", 50),
+        }
+
+
+def request_stats(req) -> RequestStats:
+    """Build one :class:`RequestStats` from a request's lifecycle stamps."""
+    arrival, first, finish = req.arrival, req.first_token, req.finished
+    ttft_s = ttft_steps = ttft_work = tpot_s = e2e_s = None
+    if first is not None and arrival is not None:
+        ttft_s = first.time - arrival.time
+        ttft_steps = first.step - arrival.step
+        ttft_work = first.work - arrival.work
+    if finish is not None and arrival is not None:
+        e2e_s = finish.time - arrival.time
+        if first is not None and len(req.out) > 1:
+            tpot_s = (finish.time - first.time) / (len(req.out) - 1)
+    return RequestStats(
+        uid=req.uid, state=req.state, prompt_len=req.prompt_len,
+        new_tokens=len(req.out), ttft_s=ttft_s, ttft_steps=ttft_steps,
+        ttft_work=ttft_work, tpot_s=tpot_s, e2e_s=e2e_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic serving model (dry-run twin of the engine loop)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: queue membership
+class _SimRequest:
+    """Duck-typed request for :func:`simulate` — exposes exactly the
+    lifecycle surface schedulers read (state / prompt_len / prefilled)."""
+
+    uid: int
+    prompt_len: int
+    max_new: int
+    arrival_s: float
+    state: str = QUEUED
+    prefilled: int = 0
+    out: list = dataclasses.field(default_factory=list)
+    arrival: Optional[Stamp] = None
+    first_token: Optional[Stamp] = None
+    finished: Optional[Stamp] = None
+
+
+def simulate(
+    scheduler: SchedulerLike,
+    trace: Sequence[tuple],
+    *,
+    slots: int,
+    t_call: float,
+    t_token: float,
+    max_len: int = 0,
+    chunking_ok: bool = True,
+    max_steps: int = 100_000,
+) -> EngineStats:
+    """Analytic replay of an arrival trace through a REAL scheduler.
+
+    This is the dry-run's serving model: the same ``plan()`` objects the
+    engine runs, executed against a two-term cost model instead of a jitted
+    model — every model invocation costs ``t_call`` (the resident
+    weight+cache HBM read, paid once per call regardless of batch) plus
+    ``t_token`` per processed batch position (activation traffic; padded
+    positions count, exactly like the real microbatched prefill).
+
+    ``trace`` rows are ``(arrival_s, prompt_len, max_new)``.  Returns an
+    :class:`EngineStats` whose ``wall_s``/``ttft_s`` live in simulated
+    seconds and whose ``work`` clock counts processed positions — the same
+    deterministic clock the real engine records.
+    """
+    scheduler = make_scheduler(scheduler)
+    pending = sorted(
+        (_SimRequest(uid=i, prompt_len=int(p), max_new=int(m),
+                     arrival_s=float(a))
+         for i, (a, p, m) in enumerate(trace)),
+        key=lambda r: r.arrival_s,
+    )
+    done: list[_SimRequest] = []
+    queue: list[_SimRequest] = []
+    active: list[Optional[_SimRequest]] = [None] * slots
+    clock, work, tokens = 0.0, 0, 0
+
+    def view(step):
+        return EngineView(slots=slots, active=tuple(active),
+                          queue=tuple(queue), chunking_ok=chunking_ok,
+                          max_len=max_len, step_index=step)
+
+    def emit(req, step):
+        req.out.append(0)
+        if req.first_token is None:
+            req.first_token = Stamp(clock, step, work)
+
+    for step in range(max_steps):
+        while pending and pending[0].arrival_s <= clock:
+            req = pending.pop(0)
+            req.arrival = Stamp(max(clock, req.arrival_s), step, work)
+            scheduler.admit(req, view(step))
+            queue.append(req)
+        if not queue and not any(active) and pending:
+            clock = pending[0].arrival_s  # idle: jump to the next arrival
+            continue
+        plan = scheduler.plan(view(step))
+        if plan.is_empty:
+            break
+        if plan.refills:
+            s_max = max(n for _, _, n in plan.refills)
+            clock += t_call + len(plan.refills) * s_max * t_token
+            work += len(plan.refills) * s_max
+            for slot, req, n in plan.refills:
+                queue.remove(req)
+                active[slot] = req
+                req.prefilled = n
+                if n == req.prompt_len:
+                    req.state = DECODING
+                    emit(req, step)
+                else:
+                    req.state = PREFILLING
+        decode = [s for s in plan.decode
+                  if active[s] is not None and active[s].state == DECODING]
+        if plan.chunks or decode:
+            s_len = max([n for _, n in plan.chunks], default=1)
+            clock += t_call + slots * s_len * t_token
+            work += slots * s_len
+            for slot, n in plan.chunks:
+                req = active[slot]
+                req.prefilled += n
+                if req.prefilled >= req.prompt_len:
+                    req.state = DECODING
+                    emit(req, step)
+            for slot in decode:
+                req = active[slot]
+                emit(req, step)
+                if len(req.out) >= req.max_new:
+                    req.state = DONE
+                    req.finished = Stamp(clock, step, work)
+                    active[slot] = None
+                    done.append(req)
+                    scheduler.on_complete(req, view(step))
+    for req in queue + [r for r in active if r is not None] + pending:
+        done.append(req)  # unfinished: recorded with partial stamps
+    done.sort(key=lambda r: r.uid)
+    tokens = sum(len(r.out) for r in done)
+    return EngineStats(
+        scheduler=scheduler.describe(),
+        requests=tuple(request_stats(r) for r in done),
+        total_tokens=tokens, wall_s=clock, work=work, steps=step + 1,
+    )

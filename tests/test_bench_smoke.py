@@ -72,6 +72,23 @@ class TestBenchSmoke:
                 line.split("ratio_vs_bf16=")[1].split(";")[0])
         assert ratios["int4_bp"] < ratios["int8"] < ratios["bf16"] == 1.0
 
+    def test_scheduler_trace_rows_present(self, smoke_output):
+        """The traffic-trace scheduler ladder: one row per registered
+        scheduler (fcfs / sjf / token_budget) over BSDP weights × int4_bp
+        cache, each reporting tok/s and deterministic work-unit TTFT
+        percentiles — with token_budget's chunked prefill holding p95
+        TTFT at or below fcfs on the mixed-length arrival trace."""
+        p95 = {}
+        for name in ("fcfs", "sjf", "token_budget"):
+            line = next(
+                l for l in smoke_output.splitlines()
+                if l.startswith(f"gemv_e2e/sched_{name}")
+            )
+            assert "tokens_per_s=" in line and "ttft_work_p50=" in line
+            p95[name] = float(
+                line.split("ttft_work_p95=")[1].split(";")[0])
+        assert p95["token_budget"] <= p95["fcfs"]
+
     def test_rows_are_csv_shaped(self, smoke_output):
         lines = [l for l in smoke_output.splitlines() if "/" in l and "," in l]
         assert lines, "no CSV rows at all"

@@ -109,6 +109,41 @@ class TestCacheRegistry:
         assert kvcache.cache_resident_bytes(caches) == \
             kvcache.cache_resident_bytes(abstract)
 
+    def test_engine_resident_breakdown_matches_dryrun_bytes(self):
+        """Satellite: ``ServeEngine.resident_bytes()`` reports the weights/
+        cache breakdown through the two residency registries, and BOTH
+        numbers equal the dry-run's analytic twins — weight bytes from the
+        ``abstract_quant`` spec walk, cache bytes from
+        ``eval_shape(init_cache)`` — byte for byte."""
+        from repro.launch import dryrun
+        from repro.models import model as model_lib
+
+        cfg = dataclasses.replace(_cfg(), cache_format="int4_bp")
+        eng = engine.ServeEngine(
+            _params(cfg), cfg, slots=2, max_len=24, mode="w8a8", min_dim=16,
+        )
+        assert eng.resident_bytes()["cache"] == 0  # no refill yet
+        eng.submit(np.arange(5, dtype=np.int32), 2)
+        eng.submit(np.arange(7, dtype=np.int32), 2)
+        eng.run()
+        breakdown = eng.resident_bytes()
+        abstract_cache = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, 2, 24, tp=1))
+        assert breakdown["cache"] == \
+            kvcache.cache_resident_bytes(abstract_cache)
+        spec_tree = model_lib.specs(cfg, 1)
+        abs_tree, _ = dryrun._serve_params(
+            spec_tree, "w8a8", P.base_rules(), min_dim=16)
+        from repro.core.residency import _nbytes
+        analytic_weights = sum(
+            _nbytes(a) for a in jax.tree_util.tree_leaves(abs_tree))
+        assert breakdown["weights"] == analytic_weights
+        assert breakdown["total"] == \
+            breakdown["weights"] + breakdown["cache"]
+        # module-level resident_bytes (roofline input) agrees with the
+        # registry-derived weights term
+        assert engine.resident_bytes(eng.params) == breakdown["weights"]
+
     def test_popcount_and_planes_gemm_agree_exactly(self):
         """Both int4_bp score kernels are the same integer math (Algorithm 2
         == plane-pair 0/1 matmuls) — bit-for-bit, like the weight kernels."""

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec
 
 from repro.configs import get_smoke_config
 from repro.core import qlinear, residency
@@ -325,6 +326,71 @@ class TestMixedResidency:
                 / (np.linalg.norm(lr) * np.linalg.norm(lb) + 1e-9)
             )
             assert cos > 0.9, cos
+
+    def test_sharded_bsdp_and_cache_specs_on_two_axis_mesh(self):
+        """ROADMAP item (multi-host sharded BSDP residency): on a 2-axis
+        (data, model) mesh, the dry-run's ``abstract_quant`` PartitionSpecs
+        for bsdp weights must follow ``BitPlaneFormat.data_axes`` (N on the
+        model axis, packed plane dims replicated) and the int4_bp cache
+        specs must follow ``cache_axes_table`` — validated end-to-end by
+        lowering a decode step over ``jax.eval_shape`` inputs."""
+        import dataclasses
+
+        from repro.launch import dryrun
+        from repro.launch.mesh import set_mesh
+        from repro.models.attention import attn_dims
+
+        if jax.device_count() < 4:
+            pytest.skip("needs 4 host devices")
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        tp = 2
+        cfg = dataclasses.replace(
+            get_smoke_config("qwen3-1.7b").scaled(n_layers=2),
+            cache_format="int4_bp",
+        )
+        rules = P.base_rules(data_axes=("data",))
+        spec_tree = model_lib.specs(cfg, tp)
+
+        # weight side: abstract_quant pspecs == BitPlaneFormat.data_axes
+        qtree = dryrun.abstract_quant(spec_tree, "bsdp", min_dim=16)
+        st = qtree["stack"]["slot0"]["ffn"]["w_in"]
+        assert isinstance(st, residency.QuantLinearState)
+        fmt = residency.get_format("bsdp")
+        assert st.data.axes == ("layers",) + fmt.data_axes("embed", "mlp")
+        assert P.spec_for(st.data.axes, rules) == \
+            PartitionSpec(None, "model", None, None)  # N sharded, planes not
+
+        # cache side: pspecs derive from BitPlaneCacheFormat.data_axes
+        from repro.core import kvcache
+
+        table = P.cache_axes_table(cfg)
+        bp = kvcache.get_cache_format("int4_bp")
+        assert table["k"] == ("batch", "kv_seq") + \
+            tuple(bp.data_axes(("kv_heads_cache",))[""])
+
+        # end-to-end: the decode cell lowers under these shardings
+        params_abs, params_sh = dryrun._serve_params(
+            spec_tree, "bsdp", rules, min_dim=16)
+        b = 4
+        cache_abs = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, b, 16, tp=tp))
+        _, _, shard_kv = attn_dims(cfg, tp)
+        cache_sh = P.cache_pspecs(cache_abs, rules, shard_kv, cfg)
+        tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+        from repro.launch.mesh import jit_shardings
+
+        with set_mesh(mesh):
+            jitted = jax.jit(
+                lambda p, t, c, pos: model_lib.decode_step(
+                    p, t, c, pos, cfg, tp=tp, rules=rules, impl="jnp"),
+                in_shardings=jit_shardings(
+                    mesh, (params_sh, P.spec_for(("batch", None), rules),
+                           cache_sh, P.spec_for(("batch",), rules))),
+            )
+            compiled = jitted.lower(
+                params_abs, tok_abs, cache_abs, pos_abs).compile()
+        assert compiled is not None
 
     def test_moe_expert_path_handles_mixed_leaves(self):
         """vmapped expert FFN with w_in quantized and w_out float (and the

@@ -1,0 +1,511 @@
+"""Scheduler-registry serving API tests (repro.serve.scheduler + engine).
+
+Anchored on four acceptance properties:
+
+1. **fcfs is bit-exact** vs the pre-redesign engine loop: a faithful
+   re-implementation of the legacy monolithic ``step()`` (FIFO refill →
+   microbatched prefill → all-slot decode) produces an identical
+   teacher-forced logit trace, array for array.
+
+2. **token_budget chunked prefill changes scheduling, not numerics**:
+   per-request greedy outputs are identical to whole-prompt prefill
+   (GQA and the absorbed MLA decode both run chunks through the ring
+   caches), while the co-scheduled short requests' TTFT strictly drops on
+   the benchmark's mixed-length arrival trace.
+
+3. **Lifecycle**: cancellation mid-decode frees the slot and a queued
+   request completes in it; per-token streaming callbacks fire in order;
+   duplicate uids are rejected at admit time and omitted uids auto-assign.
+
+4. **Registry extension**: a new scheduler registers in ≤ 25 lines and
+   works through ``ServeEngine(scheduler=...)`` with no call-site edits,
+   and the dry-run's analytic serving model ranks the same objects.
+"""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as model_lib
+from repro.serve import engine, scheduler as sched_lib
+from repro.serve.engine import Request, ServeEngine, _tree_batched, _tree_batched_pair
+from repro.serve.scheduler import (
+    CANCELLED,
+    DECODING,
+    DONE,
+    PREFILLING,
+    QUEUED,
+    EngineView,
+    FCFSScheduler,
+    StepPlan,
+)
+from repro.sharding import partitioning as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+VOCAB = 128
+
+
+def _setup(arch="qwen3-1.7b", **kw):
+    cfg = get_smoke_config(arch).scaled(n_layers=2, vocab_size=VOCAB, **kw)
+    params = P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _submit_schedule(eng, lens=(5, 3, 7), max_news=(6, 2, 4), forced=True):
+    """The canonical mid-stream-refill schedule used across serve tests."""
+    rng = np.random.default_rng(0)
+    return [
+        eng.submit(
+            rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn,
+            force=rng.integers(0, VOCAB, size=(mn,)).astype(np.int32)
+            if forced else None,
+        )
+        for n, mn in zip(lens, max_news)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1. fcfs bit-exactness vs the pre-redesign loop
+# ---------------------------------------------------------------------------
+
+
+class _LegacyEngine:
+    """Faithful re-implementation of the pre-redesign ``ServeEngine`` loop:
+    implicit FIFO queue, monolithic ``step()`` (refill free slots in slot
+    order → one microbatched prefill → decode EVERY slot at [slots, 1] with
+    stale positions/zero tokens in dead rows), bare ``done`` flags."""
+
+    def __init__(self, params, cfg, *, slots, max_len):
+        self.params, self.cfg = params, cfg
+        self.slots, self.max_len = slots, max_len
+        self.queue, self.active = [], [None] * slots
+        self.caches, self.pos = None, np.zeros(slots, np.int32)
+        self.logit_trace = []
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: model_lib.decode_step(
+                p, tok, caches, pos, cfg, tp=1, impl="jnp"
+            )
+        )
+
+    def submit(self, prompt, max_new, *, force=None):
+        r = Request(uid=len(self.queue), prompt=np.asarray(prompt),
+                    max_new=max_new,
+                    force=None if force is None else np.asarray(force))
+        self.queue.append(r)
+        return r
+
+    def _prefill_slots(self, assignments):
+        lens = [len(req.prompt) for _, req in assignments]
+        s_max = max(lens)
+        toks = np.zeros((len(assignments), s_max), np.int32)
+        pos = np.zeros((len(assignments), s_max), np.int32)
+        for i, (_, req) in enumerate(assignments):
+            pad = s_max - len(req.prompt)
+            toks[i, pad:] = req.prompt
+            pos[i] = np.arange(s_max, dtype=np.int32) - pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if s_max != min(lens):
+            batch["positions"] = jnp.asarray(pos)
+        logits, cache_b = model_lib.prefill(
+            self.params, batch, self.cfg, tp=1, max_len=self.max_len,
+            impl="jnp",
+        )
+        if self.caches is None:
+            self.caches = _tree_batched(
+                cache_b, lambda a, axis: jnp.zeros(
+                    a.shape[:axis] + (self.slots,) + a.shape[axis + 1:],
+                    a.dtype,
+                ),
+            )
+        slot_ids = jnp.array([s for s, _ in assignments], jnp.int32)
+        self.caches = _tree_batched_pair(
+            self.caches, cache_b,
+            lambda full, rows, axis: (
+                full.at[slot_ids].set(rows) if axis == 0
+                else full.at[:, slot_ids].set(rows)
+            ),
+        )
+        last_logits = np.asarray(logits[:, -1])
+        for i, (slot, req) in enumerate(assignments):
+            self.logit_trace.append(("prefill", (slot,), last_logits[i]))
+            req.out.append(ServeEngine._next_token(req, last_logits[i]))
+            self.pos[slot] = len(req.prompt)
+            self.active[slot] = req
+
+    def step(self):
+        refills = []
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                refills.append((s, self.queue.pop(0)))
+        if refills:
+            self._prefill_slots(refills)
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.active[s].out[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(self.pos)
+        )
+        step_logits = np.asarray(logits[:, 0])
+        self.logit_trace.append(("decode", tuple(live), step_logits[live]))
+        for s in live:
+            r = self.active[s]
+            r.out.append(ServeEngine._next_token(r, step_logits[s]))
+            self.pos[s] += 1
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.active[s] = None
+        return True
+
+    def run(self):
+        while self.step():
+            pass
+
+
+class TestFcfsBitExact:
+    def test_fcfs_trace_matches_legacy_engine_bit_for_bit(self):
+        """Acceptance: the default scheduler reproduces the pre-redesign
+        loop exactly — same schedule (incl. the mid-stream refill), same
+        token streams, and bit-identical logits at every trace entry."""
+        cfg, params = _setup()
+        legacy = _LegacyEngine(params, cfg, slots=2, max_len=32)
+        legacy_reqs = _submit_schedule(legacy)
+        legacy.run()
+
+        eng = ServeEngine(params, cfg, slots=2, max_len=32,
+                          scheduler="fcfs", trace_logits=True)
+        reqs = _submit_schedule(eng)
+        eng.run()
+
+        kinds = [(k, s) for k, s, _ in legacy.logit_trace]
+        assert kinds == [(k, s) for k, s, _ in eng.logit_trace]
+        # the schedule really contains a mid-stream refill
+        first_decode = kinds.index(("decode", (0, 1)))
+        assert any(k == "prefill" for k, _ in kinds[first_decode + 1:])
+        for (_, _, ll), (_, _, ln) in zip(legacy.logit_trace, eng.logit_trace):
+            np.testing.assert_array_equal(np.asarray(ll), np.asarray(ln))
+        for a, b in zip(legacy_reqs, reqs):
+            assert a.out == b.out
+            assert a.done and b.done and b.state == DONE
+
+    def test_legacy_submit_step_pattern_and_request_ctor(self):
+        """Back-compat shim: ``submit(prompt, max_new)`` + manual ``step()``
+        loops and positional ``Request(uid, prompt, max_new)`` construction
+        keep working under the scheduler-driven engine."""
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)  # default fcfs
+        r = eng.submit(np.arange(5, dtype=np.int32), 3)
+        assert isinstance(r, Request) and r.state == QUEUED
+        steps = 0
+        while eng.step():
+            steps += 1
+        assert r.done and len(r.out) == 3 and steps >= 2
+
+        legacy_req = Request(7, np.arange(4, dtype=np.int32), 2)
+        assert (legacy_req.uid, legacy_req.max_new) == (7, 2)
+        assert not legacy_req.done
+        r2 = eng.submit(legacy_req)  # pre-built requests submit as-is
+        eng.run()
+        assert r2 is legacy_req and r2.done and r2.uid == 7
+
+
+# ---------------------------------------------------------------------------
+# 2. token_budget chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def _drive_trace(eng, trace, prompts):
+    """Submit (arrival_step, prompt, max_new) rows as their step arrives."""
+    pending = list(zip(trace, prompts))
+    reqs = []
+    while pending or any(eng.active) or eng.queue:
+        while pending and pending[0][0][0] <= eng.step_index:
+            (_, _, max_new), prompt = pending.pop(0)
+            reqs.append(eng.submit(prompt, max_new))
+        eng.step()
+    return reqs
+
+
+class TestTokenBudget:
+    TRACE = ((0, 24, 3), (0, 4, 3), (0, 5, 3), (0, 6, 3), (0, 4, 3),
+             (2, 5, 3), (3, 6, 3), (4, 4, 3))
+
+    def _run(self, arch, scheduler, lens=(18, 4), max_news=(3, 3)):
+        cfg, params = _setup(arch)
+        eng = ServeEngine(params, cfg, slots=2, max_len=32,
+                          scheduler=scheduler)
+        rng = np.random.default_rng(1)
+        reqs = [
+            eng.submit(rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn)
+            for n, mn in zip(lens, max_news)
+        ]
+        eng.run()
+        return eng, reqs
+
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "minicpm3-4b"])
+    def test_chunked_prefill_outputs_match_whole_prompt(self, arch):
+        """Acceptance: budgeted chunks through the ring caches (GQA and the
+        absorbed MLA latent) produce the same greedy tokens as one
+        whole-prompt prefill — chunking is pure scheduling."""
+        _, ref = self._run(arch, "fcfs")
+        eng, got = self._run(arch, "token_budget:budget=6")
+        for a, b in zip(ref, got):
+            assert a.out == b.out, (a.out, b.out)
+            assert b.state == DONE
+        # the long prompt really went through the chunk path (3 chunks:
+        # first-chunk refill at step 0, chunks landing at steps 1 and 2)
+        st = eng.stats()
+        assert st.requests[0].ttft_steps >= 2
+
+    def test_chunking_strictly_lowers_queued_ttft_on_benchmark_trace(self):
+        """Acceptance: on the benchmark's mixed-length arrival trace the
+        short requests co-scheduled with the 24-token prompt get their
+        first token strictly earlier (work-unit clock), and p95 TTFT does
+        not regress."""
+        cfg, params = _setup()
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, VOCAB, size=(p,)).astype(np.int32)
+                   for _, p, _ in self.TRACE]
+        stats = {}
+        for name in ("fcfs", "token_budget:budget=8"):
+            eng = ServeEngine(params, cfg, slots=4, max_len=32,
+                              scheduler=name)
+            _drive_trace(eng, self.TRACE, prompts)
+            stats[name.split(":")[0]] = eng.stats()
+        fcfs, tb = stats["fcfs"], stats["token_budget"]
+        # requests 1..4 are the shorts co-arriving with the long prompt
+        for i in (1, 2, 3, 4):
+            assert tb.requests[i].ttft_work < fcfs.requests[i].ttft_work, i
+        assert tb.percentile("ttft_work", 95) <= \
+            fcfs.percentile("ttft_work", 95)
+        assert tb.total_tokens == fcfs.total_tokens
+
+    def test_chunk_state_walks_prefilling_to_decoding(self):
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32,
+                          scheduler="token_budget:budget=4")
+        r = eng.submit(np.arange(10, dtype=np.int32), 2)
+        eng.step()
+        assert r.state == PREFILLING and r.prefilled == 4 and not r.out
+        eng.step()
+        assert r.state == PREFILLING and r.prefilled == 8
+        eng.step()  # last chunk lands → first token
+        assert r.state == DECODING and r.prefilled == 10 and len(r.out) == 1
+        eng.run()
+        assert r.state == DONE
+
+    def test_ssm_hybrid_falls_back_to_whole_prompt(self):
+        """chunking_ok is False for SSM hybrids (pad tokens would pollute
+        the recurrent state): token_budget degrades to fcfs, bit-for-bit."""
+        cfg, params = _setup("falcon-mamba-7b")
+        assert not ServeEngine(params, cfg, slots=1, max_len=16)._pad_ok
+        states = []
+        eng = ServeEngine(params, cfg, slots=1, max_len=16,
+                          scheduler="token_budget:budget=2")
+        r = eng.submit(np.arange(8, dtype=np.int32), 2,
+                       on_token=lambda req, t: states.append(req.state))
+        eng.step()
+        assert r.prefilled == 8 and len(r.out) >= 1  # no chunking happened
+        eng.run()
+        assert r.done
+
+
+# ---------------------------------------------------------------------------
+# 3. Lifecycle: cancellation, streaming, admission
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    def test_cancel_mid_decode_frees_slot_for_queued_request(self):
+        """Acceptance: cancelling a decoding request frees its slot and a
+        queued request completes in it."""
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        hog = eng.submit(np.arange(5, dtype=np.int32), 50)
+        waiter = eng.submit(np.arange(4, dtype=np.int32), 3)
+        eng.step()
+        eng.step()
+        assert hog.state == DECODING and waiter.state == QUEUED
+        hog.cancel()
+        eng.run()
+        assert hog.state == CANCELLED and hog.done  # terminal legacy flag
+        assert len(hog.out) < 50 and hog.finished is not None
+        assert waiter.state == DONE and len(waiter.out) == 3
+
+    def test_cancel_while_queued_never_takes_a_slot(self):
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        a = eng.submit(np.arange(4, dtype=np.int32), 2)
+        b = eng.submit(np.arange(4, dtype=np.int32), 2)
+        b.cancel()
+        eng.run()
+        assert a.state == DONE and b.state == CANCELLED and not b.out
+
+    def test_legacy_done_writer_frees_slot(self):
+        """A legacy client stopping a request via ``r.done = True`` must
+        free its slot at the next step (not leak it forever)."""
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        a = eng.submit(np.arange(4, dtype=np.int32), 50)
+        b = eng.submit(np.arange(4, dtype=np.int32), 2)
+        eng.step()
+        a.done = True  # legacy early stop, mid-decode
+        eng.run()
+        assert a.state == DONE and a.finished is not None and len(a.out) < 50
+        assert b.state == DONE and len(b.out) == 2
+
+    def test_on_token_streams_every_token_in_order(self):
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        seen = []
+        r = eng.submit(np.arange(5, dtype=np.int32), 4,
+                       on_token=lambda req, tok: seen.append((req.uid, tok)))
+        eng.run()
+        assert seen == [(r.uid, t) for t in r.out] and len(seen) == 4
+
+    def test_uid_auto_assignment_and_duplicate_rejection(self):
+        """Satellite: omitted uids auto-assign; duplicates are rejected at
+        admit time instead of silently corrupting slot accounting."""
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        a = eng.submit(np.arange(3, dtype=np.int32), 1)
+        b = eng.submit(np.arange(3, dtype=np.int32), 1)
+        assert a.uid != b.uid and a.uid is not None
+        with pytest.raises(ValueError, match="duplicate request uid"):
+            eng.submit(np.arange(3, dtype=np.int32), 1, uid=a.uid)
+        c = eng.submit(np.arange(3, dtype=np.int32), 1, uid=99)
+        d = eng.submit(np.arange(3, dtype=np.int32), 1)
+        assert c.uid == 99 and d.uid == 100  # counter respects explicit uids
+        assert len({r.uid for r in eng.requests}) == len(eng.requests)
+
+    def test_stats_record_ttft_tpot_and_throughput(self):
+        cfg, params = _setup()
+        fake = iter(np.arange(0.0, 100.0, 0.5))
+        eng = ServeEngine(params, cfg, slots=2, max_len=32,
+                          clock=lambda: float(next(fake)))
+        _submit_schedule(eng, forced=False)
+        eng.run()
+        st = eng.stats()
+        assert st.scheduler == "fcfs" and len(st.requests) == 3
+        for r in st.requests:
+            assert r.state == DONE
+            assert r.ttft_s is not None and r.ttft_s > 0
+            assert r.ttft_work is not None and r.ttft_work > 0
+            assert r.e2e_s is not None and r.e2e_s >= r.ttft_s
+        assert st.total_tokens == sum(r.new_tokens for r in st.requests)
+        assert st.tok_per_s > 0 and st.work > 0 and st.steps > 0
+        assert st.percentile("ttft_work", 95) >= \
+            st.percentile("ttft_work", 50)
+
+
+# ---------------------------------------------------------------------------
+# 4. Registry + analytic serving model
+# ---------------------------------------------------------------------------
+
+
+class TestSchedulerRegistry:
+    def test_registry_ships_three_policies(self):
+        assert set(sched_lib.schedulers()) >= {"fcfs", "sjf", "token_budget"}
+        with pytest.raises(ValueError, match="unknown scheduler"):
+            sched_lib.make_scheduler("round_robin_nope")
+
+    def test_make_scheduler_parses_cli_kwargs(self):
+        s = sched_lib.make_scheduler("token_budget:budget=16")
+        assert isinstance(s, sched_lib.TokenBudgetScheduler)
+        assert s.budget == 16 and s.describe() == "token_budget:budget=16"
+        inst = sched_lib.FCFSScheduler()
+        assert sched_lib.make_scheduler(inst) is inst
+        assert isinstance(sched_lib.make_scheduler(None),
+                          sched_lib.FCFSScheduler)
+
+    def test_new_scheduler_registers_in_25_lines(self):
+        """Acceptance: the extension story — a LIFO policy in a handful of
+        lines plugs into ServeEngine with no call-site edits."""
+
+        class LIFOScheduler(FCFSScheduler):
+            name = "lifo_test"
+
+            def _ordered_queue(self, view):
+                return list(reversed(view.queue))
+
+        assert len(inspect.getsource(LIFOScheduler).splitlines()) <= 25
+        try:
+            sched_lib.register_scheduler(LIFOScheduler)
+            cfg, params = _setup()
+            eng = ServeEngine(params, cfg, slots=1, max_len=32,
+                              scheduler="lifo_test")
+            a = eng.submit(np.arange(4, dtype=np.int32), 2)
+            b = eng.submit(np.arange(5, dtype=np.int32), 2)
+            eng.run()
+            assert a.done and b.done
+            # LIFO: b (last in) took the single slot first
+            assert b.first_token.step < a.first_token.step
+        finally:
+            sched_lib.SCHEDULERS.pop("lifo_test", None)
+
+    def test_sjf_orders_refills_by_prompt_length(self):
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32, scheduler="sjf")
+        long = eng.submit(np.arange(12, dtype=np.int32), 2)
+        short = eng.submit(np.arange(3, dtype=np.int32), 2)
+        eng.run()
+        assert short.first_token.step < long.first_token.step
+
+    def test_plan_validation_rejects_occupied_slots(self):
+        cfg, params = _setup()
+
+        class BadScheduler(FCFSScheduler):
+            name = "bad_test"
+
+            def plan(self, view):
+                return StepPlan(
+                    refills=((0, view.queue[0], view.queue[0].prompt_len),))
+
+        eng = ServeEngine(params, cfg, slots=1, max_len=32,
+                          scheduler=BadScheduler())
+        eng.submit(np.arange(3, dtype=np.int32), 5)
+        eng.submit(np.arange(3, dtype=np.int32), 5)
+        eng.step()  # first refill is fine
+        with pytest.raises(ValueError, match="occupied slot"):
+            eng.step()
+
+    def test_simulate_ranks_schedulers_on_analytic_costs(self):
+        """The dry-run's serving model runs the REAL schedulers: chunked
+        prefill beats fcfs p95 TTFT on the long-plus-shorts trace, sjf
+        beats fcfs p50, and everyone serves the same token count."""
+        trace = [(0.0, 64, 8), (0.0, 4, 8), (0.0, 6, 8), (0.0, 5, 8),
+                 (0.0, 4, 8), (5.0, 6, 8)]
+        out = {
+            name: sched_lib.simulate(
+                name, trace, slots=4, t_call=0.1, t_token=0.5)
+            for name in ("fcfs", "sjf", "token_budget:budget=8")
+        }
+        toks = {s.total_tokens for s in out.values()}
+        assert len(toks) == 1 and toks.pop() == 6 * 8
+        assert out["token_budget:budget=8"].percentile("ttft_s", 95) < \
+            out["fcfs"].percentile("ttft_s", 95)
+        assert out["sjf"].percentile("ttft_s", 50) <= \
+            out["fcfs"].percentile("ttft_s", 50)
+
+    def test_dryrun_serving_model_record(self):
+        """analyze_cell's decode-path serving section derives per-call costs
+        from the analytic traffic model and reports one summary per
+        registered scheduler."""
+        from repro.configs.base import ShapeCell
+        from repro.launch import dryrun
+
+        cfg = get_smoke_config("qwen3-1.7b").scaled(
+            n_kv_heads=8, d_head=128)
+        cell = ShapeCell("d", 256, 8, "decode")
+        rec = dryrun.analytic_serving(cfg, cell, 1, {}, "w8a8", slots=4)
+        assert rec["t_call_s"] > 0 and rec["t_token_s"] > 0
+        assert set(rec["schedulers"]) >= {"fcfs", "sjf"}
+        for summary in rec["schedulers"].values():
+            assert summary["tokens"] > 0 and summary["ttft_s_p95"] > 0
