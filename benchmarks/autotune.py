@@ -1,0 +1,165 @@
+"""Autotuned BSDP block selection — sweep (bm, bn, bkw) per shape class.
+
+``repro.kernels.ops._BSDP_BLOCKS`` is a static preference table.  This
+module measures the real winner per **(kernel name, shape class)** — keyed
+by the :class:`repro.core.residency.KernelPolicy` kernel name (``gemv`` /
+``gemm`` / ``gemm_fused``), so every residency format dispatching to that
+kernel inherits the tuned blocks with zero call-site edits — and installs
+winners through the lookup hook :func:`repro.kernels.ops.
+register_tuned_blocks`; the static table remains the fallback for shape
+classes that were never swept.
+
+Shape classes are power-of-two buckets (:func:`repro.kernels.ops.
+bsdp_shape_class`): problems that round up to the same (M, N, Kw) powers of
+two share tiling behaviour, so one sweep covers the bucket.
+
+Every candidate is asserted integer-exact against the decoded-matmul oracle
+before it is timed — a tuned block can change performance, never results.
+
+CLI::
+
+    python -m benchmarks.autotune                       # sweep + report
+    python -m benchmarks.autotune --cache tuned.json    # sweep + persist
+    python -m benchmarks.autotune --cache tuned.json --apply
+                                                        # load + install only
+    python -m benchmarks.autotune --smoke               # CI-sized sweep
+
+On this CPU container the timings are interpret-mode (Python dispatch per
+grid step dominates, which is exactly why the fused kernel's 1-dispatch
+tiles win); on a real TPU backend the same sweep measures true MXU tilings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import row, time_fn
+from repro.core import bitplane
+from repro.kernels import ops, ref
+
+#: candidate (bm, bn, bkw) blocks per KernelPolicy kernel name
+CANDIDATES = {
+    "gemv": ((8, 128, 32), (8, 128, 64), (16, 128, 64)),
+    "gemm": ((64, 128, 16), (128, 128, 32), (128, 256, 32)),
+    "gemm_fused": ((64, 128, 16), (128, 128, 32), (128, 256, 32)),
+}
+
+#: (m, k, n) sweep points — one per serving shape class of interest
+SHAPES = ((1, 2048, 512), (8, 2048, 512), (32, 2048, 512), (128, 2048, 512))
+SMOKE_SHAPES = ((8, 512, 256),)
+SMOKE_KERNELS = ("gemm", "gemm_fused")
+
+
+def sweep(shapes=None, kernels=None) -> dict:
+    """Time every candidate; return ``{"kernel|shape_class": entry}`` where
+    entry = ``{"kernel", "shape_class", "blocks": [bm, bn, bkw], "us"}``.
+
+    Pure measurement — nothing is installed into ``ops`` (use
+    :func:`apply_cache` for that), so running the sweep never perturbs
+    other benchmarks in the same process.
+    """
+    shapes = shapes or (SMOKE_SHAPES if common.SMOKE else SHAPES)
+    if kernels is None:
+        kernels = SMOKE_KERNELS if common.SMOKE else tuple(CANDIDATES)
+    rng = np.random.default_rng(0)
+    winners: dict = {}
+    for m, k, n in shapes:
+        a = jnp.array(rng.integers(-8, 8, (m, k)).astype(np.int8))
+        w = jnp.array(rng.integers(-8, 8, (k, n)).astype(np.int8))
+        wp = bitplane.encode_weights(bitplane.pad_to_word(w, axis=0))
+        ap = bitplane.encode_acts(bitplane.pad_to_word(a))
+        kw = ap.shape[-1]
+        expected = np.array(ref.bsdp_ref(a, w))
+        for kernel in kernels:
+            if kernel == "gemv" and m > 8:
+                continue  # popcount VPU form is the M≈1 path; skip big M
+            cls = ops.bsdp_shape_class(m, n, kw)
+            best = None
+            for bm, bn, bkw in CANDIDATES[kernel]:
+                fn = lambda: ops.bsdp_matmul_planes(  # noqa: E731
+                    ap, wp, kernel=kernel, bm=bm, bn=bn, bkw=bkw
+                )
+                assert (np.array(fn()) == expected).all(), (kernel, bm, bn, bkw)
+                t = time_fn(fn, repeats=3, warmup=1)
+                if best is None or t < best[1]:
+                    best = ((bm, bn, bkw), t)
+            winners[f"{kernel}|{cls}"] = {
+                "kernel": kernel,
+                "shape_class": cls,
+                "blocks": list(best[0]),
+                "us": best[1] * 1e6,
+            }
+    return winners
+
+
+def apply_cache(cache: dict) -> int:
+    """Install cached winners into the ops lookup hook; returns the count."""
+    for entry in cache.values():
+        ops.register_tuned_blocks(
+            entry["kernel"], entry["shape_class"], tuple(entry["blocks"])
+        )
+    return len(cache)
+
+
+def save(cache: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(cache, f, indent=2, sort_keys=True)
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows(winners: dict) -> list[str]:
+    rows = []
+    for key in sorted(winners):
+        e = winners[key]
+        bm, bn, bkw = e["blocks"]
+        fb = ops._BSDP_BLOCKS[e["kernel"]]
+        rows.append(row(
+            f"autotune/{e['kernel']}_{e['shape_class']}", e["us"] / 1e6,
+            f"blocks={bm}x{bn}x{bkw};fallback_bm={fb[0]};"
+            f"candidates={len(CANDIDATES[e['kernel']])}",
+        ))
+    return rows
+
+
+def run() -> list[str]:
+    """Benchmark-harness entry: report one row per (kernel, shape class)."""
+    return _rows(sweep())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--cache", default=None,
+                    help="JSON winner cache (written after a sweep; read "
+                         "with --apply)")
+    ap.add_argument("--apply", action="store_true",
+                    help="load --cache and install winners instead of "
+                         "sweeping")
+    args = ap.parse_args()
+    if args.smoke:
+        common.set_smoke(True)
+    if args.apply:
+        if not args.cache:
+            raise SystemExit("--apply requires --cache")
+        n = apply_cache(load(args.cache))
+        print(f"installed {n} tuned block entries from {args.cache}")
+        return
+    winners = sweep()
+    if args.cache:
+        save(winners, args.cache)
+    print("name,us_per_call,derived")
+    for line in _rows(winners):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,10 @@ give the trend; the decode-cell dry-runs carry the TPU memory-term story
 The batch sweep (M ∈ {1, 8, 32, 128}) measures the GEMV→GEMM crossover:
 the popcount kernel's VPU cost grows linearly in M while the plane-pair
 GEMM kernel amortizes the weight-plane unpack over the whole batch — the
-serving argument for bit-plane residency at batch > 1.
+serving argument for bit-plane residency at batch > 1.  Each batch point
+also times the fused single-contraction kernel (``gemm_fused``: one MXU
+call per tile instead of 16 plane-pair matmuls) against the unrolled form
+— the `unrolled_over_fused` column is the per-tile dispatch-collapse win.
 """
 
 from __future__ import annotations
@@ -97,7 +100,7 @@ def run() -> list[str]:
         expected_m = np.array(ref.bsdp_ref(am, ws))
         sweep_macs = m * ks * ns
         times = {}
-        for kern in ("gemv", "gemm"):
+        for kern in ("gemv", "gemm", "gemm_fused"):
             fn = lambda a, _kern=kern: ops.bsdp_matmul(a, planes_s, kernel=_kern)
             assert (np.array(fn(am)) == expected_m).all(), (m, kern)
             times[kern] = time_fn(fn, am, repeats=3, warmup=1)
@@ -111,6 +114,12 @@ def run() -> list[str]:
                 f"MOPS={sweep_macs/times['gemm']/1e6:.0f};"
                 f"gemv_over_gemm={times['gemv']/times['gemm']:.2f};"
                 f"dispatch={pick}")
+        )
+        rows.append(
+            row(f"bsdp/batch_m{m}_gemm_fused", times["gemm_fused"],
+                f"MOPS={sweep_macs/times['gemm_fused']/1e6:.0f};"
+                f"unrolled_over_fused="
+                f"{times['gemm']/times['gemm_fused']:.2f}")
         )
 
     # resident-bytes ratio (the TPU memory-term lever, Fig. 9's real payoff)

@@ -12,17 +12,24 @@ and the V-scenario crossover where compute dominates once the per-call
 payload shrinks to the vector.
 
 The batch sweep serves M ∈ {1, 8, 32, 128} token batches against the same
-resident weights in ``w8a8`` and ``bsdp`` modes — the per-token cost curve
-that motivates routing batched prefill through the bit-plane GEMM kernel.
+resident weights in ``w8a8``, ``bsdp`` and ``bsdp_fused`` modes — the
+per-token cost curve that motivates routing batched prefill through the
+bit-plane GEMM kernel.  Bit-plane rows carry a ``dots_per_call`` column
+counted from the lowered HLO (``repro.launch.hlo_stats.dot_count``): the
+``bsdp_fused`` rows must show ONE contraction per tile where the unrolled
+``bsdp`` rows show 16 — the fusion guard asserted by
+``tests/test_bench_smoke.py``.
 
 The ``mixed_residency`` row serves a small model end-to-end through
 ``ServeEngine`` under a per-layer ResidencySpec (BSDP FFNs + w8a16
 attention over a w8a8 default) so the policy path stays benchmarked.
 
 The ``kv_cache`` rows serve the same model under each registered decode-
-cache format (``repro.core.kvcache.FORMATS``: bf16 / int8 / int4_bp),
-reporting resident cache MB and tok/s — the cache-residency ladder that
-extends the §IV memory-term win to the second-largest resident payload.
+cache format (``repro.core.kvcache.FORMATS``: bf16 / int8 / int4_bp /
+int4_bp_fused — the last reads the ring through the fused Pallas
+decode-attention kernel), reporting resident cache MB and tok/s — the
+cache-residency ladder that extends the §IV memory-term win to the
+second-largest resident payload.
 
 The ``sched`` rows complete the three-registry picture: a deterministic
 mixed-length arrival trace (one long prompt co-arriving with short
@@ -95,18 +102,25 @@ def run() -> list[str]:
     ks = ns = 512 if common.SMOKE else 1024
     sweep = (1, 8) if common.SMOKE else BATCH_SWEEP
     w = jnp.array(rng.normal(size=(ks, ns)).astype(np.float32) / np.sqrt(ks))
-    for mode in ("w8a8", "bsdp"):
+    for mode in ("w8a8", "bsdp", "bsdp_fused"):
+        from repro.core import residency
+        from repro.launch import hlo_stats
+
         state = qlinear.from_float(w, mode)
         state = jax.tree_util.tree_map(jax.block_until_ready, state)
         apply_v = jax.jit(lambda s, v: qlinear.apply(s, v))
+        bitplane_mode = residency.get_format(mode).is_bitplane
         for m in sweep:
             x = jnp.array(rng.normal(size=(m, ks)).astype(np.float32))
             t = time_fn(apply_v, state, x, repeats=3, warmup=1)
-            rows.append(
-                row(f"gemv_e2e/V_{mode}_m{m}", t,
-                    f"scenario=resident_batch;tokens_per_s={m/t:.0f};"
-                    f"us_per_token={t*1e6/m:.1f}")
-            )
+            derived = (f"scenario=resident_batch;tokens_per_s={m/t:.0f};"
+                       f"us_per_token={t*1e6/m:.1f}")
+            if bitplane_mode:
+                # MXU dispatches per tile, straight from the lowered HLO —
+                # the fused kernel's 16→1 collapse, deterministically
+                dots = hlo_stats.dot_count(apply_v.lower(state, x).as_text())
+                derived += f";dots_per_call={dots}"
+            rows.append(row(f"gemv_e2e/V_{mode}_m{m}", t, derived))
     rows.append(_mixed_residency_row())
     rows.extend(_kv_cache_rows())
     rows.extend(_scheduler_rows())

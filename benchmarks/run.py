@@ -4,10 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
     arith       Fig. 3/6/7/8  native-instruction arithmetic ladder
     bsdp        Fig. 9        bit-serial INT4 dot product vs baselines
+                              (+ unrolled vs fused single-contraction GEMM)
     transfer    Fig. 11       topology-aware vs naive host→device feeding
     gemv_e2e    Fig. 12       GEMV-MV vs GEMV-V compute:transfer split
-                              (+ per-layer mixed-ResidencySpec serving row)
+                              (+ per-layer mixed-ResidencySpec serving row,
+                              bsdp_fused ladder with per-call dot counts)
     gemv_scale  Fig. 13       full-system GOPS vs CPU server (derived)
+    autotune    (ours)        BSDP (bm, bn, bkw) block sweep per shape class
     roofline    (ours)        §Roofline summary from dry-run records
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
@@ -31,7 +34,16 @@ def main() -> None:
                     help="1 iteration, reduced shapes (CI bit-rot check)")
     args = ap.parse_args()
 
-    from benchmarks import arith, bsdp, common, gemv_e2e, gemv_scale, roofline, transfer
+    from benchmarks import (
+        arith,
+        autotune,
+        bsdp,
+        common,
+        gemv_e2e,
+        gemv_scale,
+        roofline,
+        transfer,
+    )
 
     if args.smoke:
         common.set_smoke(True)
@@ -42,6 +54,7 @@ def main() -> None:
         "transfer": transfer.run,
         "gemv_e2e": gemv_e2e.run,
         "gemv_scale": gemv_scale.run,
+        "autotune": autotune.run,
         "roofline": roofline.run,
     }
     if args.only:

@@ -40,6 +40,8 @@ def main():
             lambda a: ops.bsdp_matmul(a, planes, kernel="gemv"),
         "pallas gemm kernel (batched serving)":
             lambda a: ops.bsdp_matmul(a, planes, kernel="gemm"),
+        "pallas gemm_fused (1 MXU call per tile)":
+            lambda a: ops.bsdp_matmul(a, planes, kernel="gemm_fused"),
         "pallas auto-dispatch (M>1 -> gemm)":
             lambda a: ops.bsdp_matmul(a, planes),
     }

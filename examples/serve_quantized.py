@@ -8,12 +8,17 @@ serving registries** — the residency discipline applied to every resident
 concern:
 
 * weight residency (:mod:`repro.core.residency`): every registered format
-  plus a mixed per-layer ResidencySpec policy (BSDP for the FFN GEMVs,
-  w8a16 attention, w8a8 default);
+  — including ``bsdp_fused``, whose KernelPolicy routes batched layers to
+  the fused single-contraction GEMM kernel (one MXU call per tile instead
+  of 16 plane-pair matmuls) — plus a mixed per-layer ResidencySpec policy
+  (BSDP for the FFN GEMVs, w8a16 attention, w8a8 default);
 * decode-cache residency (:mod:`repro.core.kvcache`): ``--modes`` entries
-  may suffix a cache format as ``+kv:int4_bp`` — the last default row
-  serves BSDP FFN weights against a bit-plane K/V cache, both dominant
-  resident payloads quantized by their registries;
+  may suffix a cache format as ``+kv:int4_bp`` — the default rows end with
+  BSDP FFN weights against a bit-plane K/V cache (both dominant resident
+  payloads quantized by their registries) and the all-fused pairing
+  ``ffn=bsdp_fused × int4_bp_fused``, where decode attention reads the
+  stored planes through ONE fused Pallas kernel (qk scores, masked
+  softmax and the plane-folded av gather in a single pass);
 * orchestration (:mod:`repro.serve.scheduler`): ``--scheduler`` selects the
   admission/batching policy (fcfs | sjf | token_budget[:budget=N]) that
   plans every step — chunked prefill, refill ordering and slot reuse are
@@ -38,7 +43,10 @@ from repro.serve import engine
 from repro.sharding import partitioning as P
 
 MIXED = "ffn=bsdp,mixer=w8a16,default=w8a8"
-MODES = list(residency.formats()) + [MIXED, MIXED + "+kv:int4_bp"]
+MIXED_FUSED = "ffn=bsdp_fused,mixer=w8a16,default=w8a8"
+MODES = list(residency.formats()) + [
+    MIXED, MIXED + "+kv:int4_bp", MIXED_FUSED + "+kv:int4_bp_fused",
+]
 
 
 def main():
@@ -60,7 +68,7 @@ def main():
     ]
 
     reference = None
-    print(f"{'mode':<44} {'tok/s':>8} {'resident MB':>12} {'cache MB':>9} "
+    print(f"{'mode':<57} {'tok/s':>8} {'resident MB':>12} {'cache MB':>9} "
           f"{'ttft p50':>9} {'agree@1':>8}")
     for entry in args.modes:
         # "mode" or "mode+kv:cache_format" — weight × cache residency
@@ -90,7 +98,7 @@ def main():
         mb = breakdown["weights"] / 1e6
         cache_mb = breakdown["cache"] / 1e6
         label = eng.mode + (f"+kv:{eng.cache_format}" if cache_fmt else "")
-        print(f"{label:<44} {toks/dt:8.1f} {mb:12.2f} {cache_mb:9.3f} "
+        print(f"{label:<57} {toks/dt:8.1f} {mb:12.2f} {cache_mb:9.3f} "
               f"{st.percentile('ttft_work', 50):9.1f} {agree:8.2f}")
     print(f"scheduler: {eng.scheduler.describe()}")
     print("serve_quantized OK")

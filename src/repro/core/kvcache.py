@@ -94,6 +94,10 @@ class CacheFormat:
     is_bitplane: bool = False
     #: suffixes this format stores per channel ("" = payload)
     suffixes: tuple[str, ...] = ("",)
+    #: the format fuses qk → softmax → av into one kernel; GQA decode
+    #: routes through :meth:`decode_attention` instead of qk/av (MLA keeps
+    #: qk/av — its score mixes a float rope term before the softmax)
+    supports_fused_decode: bool = False
     kernel_policy: KernelPolicy = KernelPolicy()
 
     # -- storage lifecycle (per-format) ---------------------------------
@@ -119,6 +123,17 @@ class CacheFormat:
         """Values: ``w [B, *lead, G, L] × store → [B, *lead, G, feat]``
         float32, value scales folded into ``w`` before the contraction."""
         raise NotImplementedError
+
+    def decode_attention(self, q: jax.Array, k_store: dict, v_store: dict,
+                         bias: jax.Array, *, sm_scale: float,
+                         feat: int) -> jax.Array:
+        """Fused qk → masked softmax → av in one kernel (only when
+        ``supports_fused_decode``): ``q [B, H, G, F]`` against both channel
+        stores under the additive ``bias [B, H, G, L]`` mask →
+        ``[B, H, G, feat]`` float32."""
+        raise NotImplementedError(
+            f"cache format {self.name!r} has no fused decode path"
+        )
 
     def abstract_state(self, batch: int, cache_len: int,
                        lead: tuple[int, ...], feat: int,
@@ -330,10 +345,16 @@ class BitPlaneCacheFormat(CacheFormat):
     * ``planes_gemm`` — the MXU adaptation: unpack planes to 0/1 bit
       matrices and contract plane pairs as int8 matmuls (the batched form
       of :func:`repro.core.bsdp.bsdp_matmul_planes`).
+    * ``planes_gemm_fused`` — the single-contraction twin of the weight
+      kernels' ``gemm_fused``: the plane axis interleaves into the row axis
+      (``[G·4, F] × [F, L·4]``), ONE integer contraction produces the whole
+      ``[G, 4, L, 4]`` plane-pair table, and the ``s_jk·2^{j+k}`` weighting
+      collapses to a ``[4, 4]``-weighted elementwise reduce.  Bit-identical
+      to the other two forms (asserted in tests).
 
     The batch-aware :class:`KernelPolicy` picks per decode batch — the same
     "dispatch is data" rule the weight formats use (GEMV-V single-request
-    traffic → popcount, multi-slot continuous batching → GEMM).
+    traffic → popcount, multi-slot continuous batching → the fused GEMM).
 
     Value path (``av``): softmax weights stay float, so the read decodes
     planes to int8 values and folds ``v_scale`` into the weights — same
@@ -343,7 +364,7 @@ class BitPlaneCacheFormat(CacheFormat):
     name = "int4_bp"
     is_bitplane = True
     suffixes = ("", "_scale")
-    kernel_policy = KernelPolicy(gemv="popcount", gemm="planes_gemm")
+    kernel_policy = KernelPolicy(gemv="popcount", gemm="planes_gemm_fused")
 
     def __init__(self, name: Optional[str] = None,
                  kernel_policy: Optional[KernelPolicy] = None):
@@ -377,22 +398,45 @@ class BitPlaneCacheFormat(CacheFormat):
 
     def _score_planes(self, q_planes, k_planes, kernel):
         """int32 plane-space scores ``[..., G, 4, Fw] × [..., L, 4, Fw] →
-        [..., G, L]``; both forms are integer-exact and interchangeable."""
+        [..., G, L]``; all three forms are integer-exact and
+        interchangeable (``popcount`` / ``planes_gemm`` /
+        ``planes_gemm_fused``)."""
         if kernel == "popcount":
             return bsdp.bsdp_popcount(
                 q_planes[..., :, None, :, :], k_planes[..., None, :, :, :],
                 signed=True,
             )
+        if kernel not in ("planes_gemm", "planes_gemm_fused"):
+            raise ValueError(
+                f"unknown decode-score kernel {kernel!r} (requested via "
+                f"cache format {self.name!r}'s KernelPolicy); known: "
+                "['planes_gemm', 'planes_gemm_fused', 'popcount']"
+            )
         qb = bsdp._bits_to_int8(q_planes)  # [..., G, 4, F] 0/1
         kb = bsdp._bits_to_int8(k_planes)  # [..., L, 4, F] 0/1
+        signs = jnp.array(bsdp.plane_signs(True), jnp.int32)
+        shifts = jnp.array(
+            [[1 << (j + k) for k in range(4)] for j in range(4)], jnp.int32)
+        weights = signs * shifts
+        if kernel == "planes_gemm_fused":
+            # Interleave planes into the row axis and run ONE contraction:
+            # [..., G·4, F] × [..., L·4, F] → the full [G, 4, L, 4]
+            # plane-pair table, then the [4,4] shift/sign weighting as an
+            # elementwise reduce — no second contraction.
+            *lead, g, _, f = qb.shape
+            l = kb.shape[-3]
+            qf = qb.reshape(*lead, g * 4, f)
+            kf = kb.reshape(*lead, l * 4, f)
+            table = jnp.einsum(
+                "...af,...bf->...ab", qf, kf,
+                preferred_element_type=jnp.int32,
+            ).reshape(*lead, g, 4, l, 4)
+            return jnp.sum(table * weights[:, None, :], axis=(-3, -1))
         table = jnp.einsum(
             "...gjf,...lkf->...gljk", qb, kb,
             preferred_element_type=jnp.int32,
         )
-        signs = jnp.array(bsdp.plane_signs(True), jnp.int32)
-        shifts = jnp.array(
-            [[1 << (j + k) for k in range(4)] for j in range(4)], jnp.int32)
-        return jnp.einsum("...gljk,jk->...gl", table, signs * shifts)
+        return jnp.einsum("...gljk,jk->...gl", table, weights)
 
     def qk(self, q, store):
         qq_scale = _slot_scale(q, 7)  # [..., G]
@@ -428,6 +472,57 @@ class BitPlaneCacheFormat(CacheFormat):
                 "_scale": tuple(lead_axes)}
 
 
+class FusedBitPlaneCacheFormat(BitPlaneCacheFormat):
+    """``int4_bp`` storage + the fused Pallas decode-attention kernel.
+
+    Identical resident layout, bytes, ``append`` and sharding axes to
+    ``int4_bp`` (it IS a :class:`BitPlaneCacheFormat`); the difference is
+    pure kernel policy: GQA decode routes the whole qk → masked softmax →
+    av read through ONE Pallas pass per (batch × kv-head) row
+    (:func:`repro.kernels.ops.plane_decode_attention`), contracting
+    directly on the stored planes — one integer qk contraction, one
+    plane-folded av contraction, per-slot scales folded after the integer
+    math.  The jnp plane math of the parent class is the reference
+    semantics this kernel reproduces (within softmax rounding); MLA decode
+    keeps the parent's qk/av because its score mixes a float rope term
+    between the two.
+    """
+
+    name = "int4_bp_fused"
+    supports_fused_decode = True
+
+    def decode_attention(self, q, k_store, v_store, bias, *, sm_scale, feat,
+                         interpret=None):
+        from repro.kernels import ops
+
+        b, h, g, _ = q.shape
+        qq_scale = _slot_scale(q, 7)  # [B, H, G]
+        qq = jnp.clip(
+            jnp.round(q.astype(jnp.float32) / qq_scale[..., None]), -8, 7
+        ).astype(jnp.int8)
+        q_planes = bitplane.encode(bitplane.pad_to_word(qq))  # [B,H,G,4,Fw]
+        k_planes = _to_l_minor(k_store[""], 2)  # [B, H, L, 4, Fw]
+        k_scale = _to_l_minor(k_store["_scale"], 0)  # [B, H, L]
+        v_planes = _to_l_minor(v_store[""], 2)
+        v_scale = _to_l_minor(v_store["_scale"], 0)
+        l, fw = k_planes.shape[2], k_planes.shape[-1]
+        out = ops.plane_decode_attention(
+            q_planes.reshape(b * h, g, 4, fw),
+            qq_scale.reshape(b * h, g),
+            k_planes.reshape(b * h, l, 4, fw),
+            k_scale.reshape(b * h, l),
+            v_planes.reshape(b * h, l, 4, fw),
+            v_scale.reshape(b * h, l),
+            bias.reshape(b * h, g, l),
+            sm_scale=sm_scale, feat=feat, interpret=interpret,
+        )
+        return out.reshape(b, h, g, feat)
+
+
+#: the name ISSUE/ROADMAP use for the bit-plane cache format class
+Int4BPCacheFormat = BitPlaneCacheFormat
+
 register_cache_format(BF16CacheFormat())
 register_cache_format(Int8CacheFormat())
 register_cache_format(BitPlaneCacheFormat())
+register_cache_format(FusedBitPlaneCacheFormat())

@@ -385,9 +385,14 @@ class BitPlaneFormat(ResidencyFormat):
     Payload is ``[N, 4, ceil(K/32)]`` uint32 planes, output-channel-major so
     a TP shard of the N axis owns contiguous planes (``data_axes`` shards
     only N — the "block of rows per DPU" rule).  The kernel policy is the
-    only difference between the two registered instances: ``w4a4_bsdp``
+    only difference between the three registered instances: ``w4a4_bsdp``
     keeps the faithful popcount kernel at every batch size, ``bsdp``
-    dispatches M==1 → popcount GEMV / M>1 → plane-pair GEMM.
+    dispatches M==1 → popcount GEMV / M>1 → the unrolled 16-matmul
+    plane-pair GEMM, and ``bsdp_fused`` routes M>1 to the fused
+    single-contraction kernel (``gemm_fused``: one ``[bm·4, K] × [K, bn·4]``
+    MXU call per tile, bit-identical to the unrolled form).  All three
+    share this payload, so ``data_axes`` / ``abstract_state`` / byte
+    accounting are identical — switching kernels is pure KernelPolicy data.
     """
 
     is_bitplane = True
@@ -412,7 +417,7 @@ class BitPlaneFormat(ResidencyFormat):
         xq = quant.quantize_acts(x.astype(jnp.float32), bits=4)
         acc = ops.bsdp_matmul(
             xq.data, state.data, signed=True, interpret=interpret,
-            kernel=self.kernel_policy.kernel_for(m),
+            kernel=self.kernel_policy.kernel_for(m), fmt_name=self.name,
         )
         return acc.astype(jnp.float32) * xq.scale.reshape(-1, 1) * state.scale
 
@@ -450,6 +455,9 @@ register_format(Int8Format("w8a8", act_bits=8))
 register_format(PackedInt4Format())
 register_format(BitPlaneFormat("w4a4_bsdp", KernelPolicy(gemv="gemv", gemm="gemv")))
 register_format(BitPlaneFormat("bsdp", KernelPolicy(gemv="gemv", gemm="gemm")))
+register_format(
+    BitPlaneFormat("bsdp_fused", KernelPolicy(gemv="gemv", gemm="gemm_fused"))
+)
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,20 @@ unrolled shift-accumulate.
 Integer-exact: cross-checked against the decoded int32 matmul oracle
 (:func:`repro.kernels.ref.bsdp_gemm_ref`) and, at M == 1, bit-for-bit
 against the GEMV popcount kernel.
+
+Two kernels share this file:
+
+* :func:`bsdp_gemm` — the unrolled form above: 16 per-(j, k) plane-pair
+  ``dot_general`` calls per tile (one MXU dispatch per pair).
+* :func:`bsdp_gemm_fused` — the single-contraction form (the paper's §IV
+  "one dense pass instead of many scalar ones" restructuring, applied to
+  the MXU): the 4 planes are *interleaved into the row axis* of the bit
+  matrices, so one ``[bm·4, K] × [K, bn·4]`` contraction computes all 16
+  plane-pair popcount sums at once, and the ``s_jk · 2^{j+k}`` weighting
+  collapses to a ``[4, 4]``-weighted elementwise reduce over the reshaped
+  ``[bm, 4, bn, 4]`` table — ONE MXU invocation per tile instead of 16.
+  Bit-identical to :func:`bsdp_gemm` (asserted in tests and by the
+  ``hlo_stats`` dot-count guard in ``tests/test_bsdp_gemm.py``).
 """
 
 from __future__ import annotations
@@ -40,6 +54,20 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.bsdp import plane_signs
 
 _WORD = 32
+
+
+def _plane_weights(signed: bool) -> jax.Array:
+    """``[4, 4]`` in-kernel constant ``s_jk · 2^{j+k}`` (int32).
+
+    Built from iota inside the kernel (Pallas kernels cannot capture traced
+    array constants): ``s_jk = -1`` iff exactly one of j, k == 3.
+    """
+    j = jax.lax.broadcasted_iota(jnp.int32, (4, 4), 0)
+    k = jax.lax.broadcasted_iota(jnp.int32, (4, 4), 1)
+    w = jnp.int32(1) << (j + k)
+    if signed:
+        w = jnp.where((j == 3) != (k == 3), -w, w)
+    return w
 
 
 def _unpack_bits(words: jax.Array) -> jax.Array:
@@ -78,6 +106,106 @@ def _bsdp_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, signed: bool):
     @pl.when(k_step == pl.num_programs(2) - 1)
     def _finalize():
         o_ref[...] = acc_ref[...]
+
+
+def _unpack_planes_rows(planes: jax.Array) -> jax.Array:
+    """``[R, 4, Kw] uint32 → [R·4, Kw·32] 0/1 int8`` — plane-interleaved rows.
+
+    Row ``r·4 + j`` holds the ``2^j`` bit-plane of input row ``r``, so a
+    single contraction of two such matrices yields every (j, k) plane-pair
+    popcount sum as one entry of a ``[R·4, C·4]`` table.
+    """
+    r, p, kw = planes.shape
+    shifts = jnp.arange(_WORD, dtype=jnp.uint32)
+    bits = ((planes[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int8)
+    return bits.reshape(r * p, kw * _WORD)
+
+
+def _bsdp_gemm_fused_kernel(x_ref, w_ref, o_ref, acc_ref, *, signed: bool):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # [bm, 4, bkw] uint32
+    w = w_ref[...]  # [bn, 4, bkw] uint32
+    bm, bn = x.shape[0], w.shape[0]
+    # Interleave planes into the row axis: [bm·4, K] and [bn·4, K] 0/1 bit
+    # matrices — the fused operand layout.
+    xbits = _unpack_planes_rows(x)  # [bm*4, bkw*32]
+    wbits = _unpack_planes_rows(w)  # [bn*4, bkw*32]
+    # ONE MXU contraction computes all 16 plane-pair popcount sums:
+    # table[m*4+j, n*4+k] == popcount(x_plane_j[m] AND w_plane_k[n]).
+    table = jax.lax.dot_general(
+        xbits,
+        wbits,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # [bm*4, bn*4]
+    # Fold the s_jk·2^{j+k} shift/sign weighting as a [4,4]-weighted reduce
+    # over the reshaped [bm, 4, bn, 4] table (elementwise VPU epilogue — no
+    # further MXU work).
+    weights = _plane_weights(signed)  # [4, 4] int32
+    table = table.reshape(bm, 4, bn, 4)
+    acc_ref[...] = acc_ref[...] + jnp.sum(
+        table * weights[:, None, :], axis=(1, 3)
+    )
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bkw", "signed", "interpret")
+)
+def bsdp_gemm_fused(
+    x_planes: jax.Array,
+    w_planes: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bkw: int = 32,
+    signed: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused single-contraction BSDP GEMM: ``[M,4,Kw] × [N,4,Kw] → [M,N]``.
+
+    Same contract as :func:`bsdp_gemm`, but each grid step runs ONE
+    ``[bm·4, bkw·32] × [bkw·32, bn·4]`` int8 contraction (the plane axis
+    interleaved into the row axis) instead of 16 per-(j,k) matmuls, then
+    reduces the ``[bm, 4, bn, 4]`` plane-pair table with the ``[4, 4]``
+    ``s_jk·2^{j+k}`` weight matrix.  Bit-identical output; 1/16th the MXU
+    dispatches (asserted via ``hlo_stats`` dot counting in the tests).
+
+    VMEM at the ``(128, 128, 32)`` default: two 512×1024 int8 bit matrices
+    (1 MB), a 512×512 int32 pair table (1 MB) and the 64 KB accumulator —
+    comfortably inside a TPU core's VMEM, with an MXU-shaped
+    ``[512, 1024] × [1024, 512]`` contraction per step.
+    """
+    m, px, kw = x_planes.shape
+    n, pw, kw2 = w_planes.shape
+    assert px == 4 and pw == 4 and kw == kw2, (x_planes.shape, w_planes.shape)
+    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0, (
+        x_planes.shape,
+        w_planes.shape,
+        (bm, bn, bkw),
+    )
+
+    kernel = functools.partial(_bsdp_gemm_fused_kernel, signed=signed)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, kw // bkw),
+        in_specs=[
+            pl.BlockSpec((bm, 4, bkw), lambda i, j, kk: (i, 0, kk)),
+            pl.BlockSpec((bn, 4, bkw), lambda i, j, kk: (j, 0, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_planes, w_planes)
 
 
 @functools.partial(

@@ -32,6 +32,7 @@ from repro.kernels import (
     dim_kernel,
     gemv_int4,
     gemv_int8,
+    plane_attn,
 )
 
 
@@ -149,10 +150,87 @@ def quant_matmul_int4(
 # ---------------------------------------------------------------------------
 
 #: per-kernel (preferred bm, bm align, preferred bkw) — bn is shared (128).
+#: This is the static FALLBACK table; autotuned winners (benchmarks/
+#: autotune.py) are registered per (kernel, shape class) in _BSDP_TUNED and
+#: take precedence in :func:`bsdp_blocks_for`.
 _BSDP_BLOCKS = {
     "gemv": (8, 8, 64),
     "gemm": (128, 8, 32),
+    "gemm_fused": (128, 8, 32),
 }
+
+#: kernel name → (module, attr), resolved at call time so tests can
+#: monkeypatch the kernel modules and observe dispatch.
+_BSDP_KERNEL_IMPLS = {
+    "gemv": (bsdp_kernel, "bsdp_matmul"),
+    "gemm": (bsdp_gemm, "bsdp_gemm"),
+    "gemm_fused": (bsdp_gemm, "bsdp_gemm_fused"),
+}
+
+# A kernel registered for blocks but not dispatch (or vice versa) must fail
+# at import, not as a KeyError deep in a traced call.
+assert _BSDP_KERNEL_IMPLS.keys() == _BSDP_BLOCKS.keys(), (
+    "BSDP kernel tables out of sync",
+    sorted(_BSDP_KERNEL_IMPLS), sorted(_BSDP_BLOCKS),
+)
+
+#: autotuned (kernel name, shape class) → (bm, bn, bkw) preferred blocks.
+_BSDP_TUNED: dict[tuple[str, str], tuple[int, int, int]] = {}
+
+
+def bsdp_shape_class(m: int, n: int, kw: int) -> str:
+    """Power-of-two shape bucket — the autotune cache key.
+
+    Problem shapes that round up to the same (M, N, Kw) powers of two share
+    tiling behaviour, so winners cache per bucket, not per exact shape.
+    """
+
+    def up(v: int) -> int:
+        return 1 << max(0, int(v - 1).bit_length())
+
+    return f"m{up(m)}_n{up(n)}_kw{up(kw)}"
+
+
+def register_tuned_blocks(
+    kernel: str, shape_cls: str, blocks: tuple[int, int, int]
+) -> None:
+    """Install an autotuned (bm, bn, bkw) winner for one shape class.
+
+    Keyed by the :class:`repro.core.residency.KernelPolicy` kernel name, so
+    every format that dispatches to that kernel picks the winner up with no
+    call-site edits.  ``_BSDP_BLOCKS`` remains the fallback for shape
+    classes without a cached winner.
+    """
+    if kernel not in _BSDP_BLOCKS:
+        raise ValueError(
+            f"cannot tune unknown kernel {kernel!r}; known: "
+            f"{sorted(_BSDP_BLOCKS)}"
+        )
+    bm, bn, bkw = (int(b) for b in blocks)
+    if min(bm, bn, bkw) <= 0:
+        raise ValueError(f"blocks must be positive, got {blocks}")
+    _BSDP_TUNED[(kernel, shape_cls)] = (bm, bn, bkw)
+
+
+def clear_tuned_blocks() -> None:
+    """Drop all autotuned winners (tests; fall back to _BSDP_BLOCKS)."""
+    _BSDP_TUNED.clear()
+
+
+def bsdp_blocks_for(kernel: str, m: int, n: int, kw: int) -> tuple[int, int, int]:
+    """(bm, bn, bkw) for one problem shape: the autotuned winner for the
+    shape class when cached, else the static preference — both clamped to
+    the actual dims so tiny problems never over-pad."""
+    bm_pref, bm_align, bkw_pref = _BSDP_BLOCKS[kernel]
+    bn_pref = 128
+    tuned = _BSDP_TUNED.get((kernel, bsdp_shape_class(m, n, kw)))
+    if tuned is not None:
+        bm_pref, bn_pref, bkw_pref = tuned
+    return (
+        _pick_block(m, bm_pref, bm_align),
+        _pick_block(n, bn_pref, 128),
+        _pick_block(kw, bkw_pref, 8),
+    )
 
 
 def bsdp_kernel_for(m: int) -> str:
@@ -162,6 +240,9 @@ def bsdp_kernel_for(m: int) -> str:
     VPU work is minimal and avoids unpacking weight planes to bit matrices.
     At M > 1 the per-(j,k) plane-pair contractions become real int8 MXU
     matmuls whose cost amortizes over the batch — the GEMM kernel wins.
+    (``gemm_fused`` — the single-contraction form — is selected by the
+    residency formats' :class:`~repro.core.residency.KernelPolicy`, e.g.
+    ``bsdp_fused``; this function is the registry-free ops-level default.)
     """
     return "gemv" if m == 1 else "gemm"
 
@@ -176,28 +257,43 @@ def bsdp_matmul_planes(
     bn: Optional[int] = None,
     bkw: Optional[int] = None,
     kernel: Optional[str] = None,
+    fmt_name: Optional[str] = None,
 ) -> jax.Array:
     """Plane-form BSDP: ``[M,4,Kw] × [N,4,Kw] → int32 [M,N]`` (exact).
 
     ``kernel``: ``None`` dispatches by batch (:func:`bsdp_kernel_for`);
-    ``"gemv"`` forces the faithful popcount kernel, ``"gemm"`` the batched
-    MXU plane-pair kernel.  Padding and block selection are shared.
+    ``"gemv"`` forces the faithful popcount kernel, ``"gemm"`` the unrolled
+    16-matmul plane-pair kernel, ``"gemm_fused"`` the single-contraction
+    form (one MXU call per tile).  Padding and block selection are shared;
+    blocks come from the autotune cache when a winner exists for the shape
+    class (:func:`bsdp_blocks_for`).  ``fmt_name`` names the residency
+    format that routed here — carried into block-selection errors so a
+    mixed-``ResidencySpec`` misconfiguration is traceable to its policy
+    entry, not just the kernel string.
     """
     m, _, kw = x_planes.shape
     n = w_planes.shape[0]
     kernel = kernel or bsdp_kernel_for(m)
     if kernel not in _BSDP_BLOCKS:
-        raise ValueError(f"kernel {kernel!r} not in {sorted(_BSDP_BLOCKS)}")
-    bm_pref, bm_align, bkw_pref = _BSDP_BLOCKS[kernel]
-    bm = bm or _pick_block(m, bm_pref, bm_align)
-    bn = bn or _pick_block(n, 128, 128)
-    bkw = bkw or _pick_block(kw, bkw_pref, 8)
+        via = (
+            f" (requested via residency format {fmt_name!r}'s KernelPolicy)"
+            if fmt_name else ""
+        )
+        raise ValueError(
+            f"unknown BSDP kernel {kernel!r}{via}; registered kernels: "
+            f"{sorted(_BSDP_BLOCKS)}"
+        )
+    bm_auto, bn_auto, bkw_auto = bsdp_blocks_for(kernel, m, n, kw)
+    bm = bm or bm_auto
+    bn = bn or bn_auto
+    bkw = bkw or bkw_auto
     mp, np_, kwp = _round_up(m, bm), _round_up(n, bn), _round_up(kw, bkw)
 
     def pad3(p, d0, d2):
         return jnp.pad(p, ((0, d0 - p.shape[0]), (0, 0), (0, d2 - p.shape[2])))
 
-    fn = bsdp_kernel.bsdp_matmul if kernel == "gemv" else bsdp_gemm.bsdp_gemm
+    mod, attr = _BSDP_KERNEL_IMPLS[kernel]
+    fn = getattr(mod, attr)
     out = fn(
         pad3(x_planes, mp, kwp),
         pad3(w_planes, np_, kwp),
@@ -213,15 +309,18 @@ def bsdp_matmul(
     signed: bool = True,
     interpret: Optional[bool] = None,
     kernel: Optional[str] = None,
+    fmt_name: Optional[str] = None,
 ) -> jax.Array:
     """End-to-end batch-aware BSDP: raw int4 activations ``[M,K]`` × encoded
     weights ``[N,4,K/32]`` → int32 ``[M,N]``.  Activation bit-plane encode is
     fused under the same jit (the per-request transform the paper calls
     "negligible compared to broadcast cost"); the kernel is chosen per batch
-    size unless forced via ``kernel``."""
+    size unless forced via ``kernel``; ``fmt_name`` tags errors with the
+    residency format that routed the call."""
     x_planes = bitplane.encode_acts(bitplane.pad_to_word(x_i4))
     return bsdp_matmul_planes(
-        x_planes, w_planes, signed=signed, interpret=interpret, kernel=kernel
+        x_planes, w_planes, signed=signed, interpret=interpret, kernel=kernel,
+        fmt_name=fmt_name,
     )
 
 
@@ -234,6 +333,34 @@ def bsdp_gemv(
 ) -> jax.Array:
     """Back-compat alias of :func:`bsdp_matmul` (pre-GEMM entry point)."""
     return bsdp_matmul(x_i4, w_planes, signed=signed, interpret=interpret)
+
+
+def plane_decode_attention(
+    q_planes: jax.Array,   # [R, G, 4, Fw] uint32
+    q_scale: jax.Array,    # [R, G] f32
+    k_planes: jax.Array,   # [R, L, 4, Fw] uint32
+    k_scale: jax.Array,    # [R, L] f32
+    v_planes: jax.Array,   # [R, L, 4, Fw] uint32
+    v_scale: jax.Array,    # [R, L] f32
+    bias: jax.Array,       # [R, G, L] f32 additive mask
+    *,
+    sm_scale: float,
+    feat: int,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused bit-plane decode attention → ``[R, G, feat]`` f32.
+
+    Wraps :func:`repro.kernels.plane_attn.plane_decode_attention`: the qk
+    scores, masked softmax and av gather run in ONE Pallas pass per
+    (batch × kv-head) row, contracting directly on the stored planes with
+    all scales folded after the integer contraction.  The word-padded
+    feature axis is sliced back to ``feat`` here.
+    """
+    out = plane_attn.plane_decode_attention(
+        q_planes, q_scale, k_planes, k_scale, v_planes, v_scale, bias,
+        sm_scale=sm_scale, interpret=_interpret(interpret),
+    )
+    return out[..., :feat]
 
 
 # ---------------------------------------------------------------------------
@@ -302,9 +429,14 @@ __all__ = [
     "matmul_int8_raw",
     "quant_matmul_int4",
     "bsdp_kernel_for",
+    "bsdp_shape_class",
+    "bsdp_blocks_for",
+    "register_tuned_blocks",
+    "clear_tuned_blocks",
     "bsdp_matmul_planes",
     "bsdp_matmul",
     "bsdp_gemv",
+    "plane_decode_attention",
     "dim_matmul",
     "weight_only_matmul",
 ]

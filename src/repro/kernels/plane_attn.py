@@ -1,0 +1,156 @@
+"""Fused Pallas decode attention over the bit-plane KV layout.
+
+The ``int4_bp`` cache format stores K and V slots as ``[..., 4, Fw]`` uint32
+bit-planes (:mod:`repro.core.bitplane`).  The jnp decode path (the reference
+semantics, :class:`repro.core.kvcache.BitPlaneCacheFormat`) computes the qk
+scores on the planes and then dequantizes V for the av gather — three
+separate XLA computations with the softmax in between.
+
+This kernel fuses the whole decode-attention read into one Pallas pass per
+(batch, kv-head) row, computing *directly on the stored planes*:
+
+1. **qk** — unpack the int4-quantized query planes and the stored K planes
+   into plane-interleaved 0/1 bit matrices (``[G·4, F]`` / ``[L·4, F]``,
+   row ``r·4+j`` = the ``2^j`` plane of row ``r``) and run ONE int8
+   contraction; the ``[G, 4, L, 4]`` plane-pair popcount table collapses
+   under the ``s_jk·2^{j+k}`` weight matrix (the same fused
+   single-contraction trick as :func:`repro.kernels.bsdp_gemm.
+   bsdp_gemm_fused`).  Per-slot K scales and the per-vector query scales
+   fold AFTER the integer contraction.
+2. **softmax** — masked (additive bias), numerically-stable, in-register.
+3. **av** — the V planes never dequantize to a value matrix: the plane
+   weights ``(1, 2, 4, -8)`` fold into the softmax weights (together with
+   the per-slot ``v_scale``), so the gather is ONE ``[G, L·4] × [L·4, F]``
+   contraction against the raw 0/1 V bit matrix.
+
+Two MXU contractions total per row — versus 16 plane-pair matmuls plus a
+separate dequantized V gather on the unrolled path.  Scores are
+integer-identical to the jnp plane math; the float epilogue (softmax, av)
+matches within rounding (asserted in ``tests/test_kvcache.py``).
+
+Grid: one step per flattened (batch × kv-head) row, whole cache length L
+staged per step — decode caches are ring buffers of bounded L, so a
+``(G, L, F)`` tile at serving shapes (G ≲ 64 groups, L ≲ 8k slots, F ≲ 128)
+stays inside VMEM.  Longer rings would tile L with an online-softmax carry,
+which this layout permits but the ring caches here do not yet need.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bsdp_gemm import (
+    _plane_weights as _pair_weights,
+    _unpack_planes_rows as _unpack_rows,
+)
+
+_WORD = 32
+
+
+def _plane_values(signed: bool) -> jax.Array:
+    """``[1, 4]`` int4 plane reconstruction weights: ``v = 1·b0 + 2·b1 +
+    4·b2 ± 8·b3`` (−8 for signed two's complement, +8 unsigned)."""
+    i = jax.lax.broadcasted_iota(jnp.int32, (1, 4), 1)
+    w = jnp.int32(1) << i
+    if signed:
+        w = jnp.where(i == 3, -w, w)
+    return w.astype(jnp.float32)
+
+
+def _plane_attn_kernel(
+    qp_ref, qs_ref, kp_ref, ks_ref, vp_ref, vs_ref, bias_ref, o_ref,
+    *, sm_scale: float, signed: bool,
+):
+    qp = qp_ref[0]  # [G, 4, Fw] uint32 query planes
+    kp = kp_ref[0]  # [L, 4, Fw] uint32 stored K planes
+    vp = vp_ref[0]  # [L, 4, Fw] uint32 stored V planes
+    g, l = qp.shape[0], kp.shape[0]
+
+    # -- qk: one contraction for all 16 plane pairs ---------------------
+    qbits = _unpack_rows(qp)  # [G*4, F]
+    kbits = _unpack_rows(kp)  # [L*4, F]
+    table = jax.lax.dot_general(
+        qbits,
+        kbits,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).reshape(g, 4, l, 4)
+    weights = _pair_weights(signed)  # [4, 4]
+    s_int = jnp.sum(table * weights[:, None, :], axis=(1, 3))  # [G, L]
+
+    # -- scales fold after the integer contraction ----------------------
+    scores = (
+        s_int.astype(jnp.float32)
+        * qs_ref[0][:, None]
+        * ks_ref[0][None, :]
+        * sm_scale
+        + bias_ref[0]  # additive mask (0 / NEG_INF), finite
+    )
+
+    # -- masked softmax (bias is a large-negative float, never -inf) ----
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    w = p / jnp.sum(p, axis=-1, keepdims=True)  # [G, L]
+
+    # -- av: plane weights + v_scale fold into the softmax weights ------
+    wv = w * vs_ref[0][None, :]  # [G, L]
+    wexp = (wv[:, :, None] * _plane_values(signed)[0]).reshape(g, l * 4)
+    vbits = _unpack_rows(vp).astype(jnp.float32)  # [L*4, F]
+    o_ref[0] = jax.lax.dot_general(
+        wexp,
+        vbits,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [G, F]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "signed", "interpret")
+)
+def plane_decode_attention(
+    q_planes: jax.Array,   # [R, G, 4, Fw] uint32
+    q_scale: jax.Array,    # [R, G] f32
+    k_planes: jax.Array,   # [R, L, 4, Fw] uint32
+    k_scale: jax.Array,    # [R, L] f32
+    v_planes: jax.Array,   # [R, L, 4, Fw] uint32
+    v_scale: jax.Array,    # [R, L] f32
+    bias: jax.Array,       # [R, G, L] f32 additive mask (0 / NEG_INF)
+    *,
+    sm_scale: float,
+    signed: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused plane-layout decode attention → ``[R, G, Fw·32] f32``.
+
+    ``R`` flattens (batch × kv-head); ``G`` is the folded (chunk × group)
+    query axis; ``L`` the ring length.  The caller slices the feature axis
+    back to the logical head dim (planes are word-padded).
+    """
+    r, g, p, fw = q_planes.shape
+    l = k_planes.shape[1]
+    assert p == 4 and k_planes.shape[1:] == v_planes.shape[1:], (
+        q_planes.shape, k_planes.shape, v_planes.shape)
+    assert bias.shape == (r, g, l), (bias.shape, (r, g, l))
+    kernel = functools.partial(
+        _plane_attn_kernel, sm_scale=sm_scale, signed=signed
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, g, 4, fw), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, g), lambda i: (i, 0)),
+            pl.BlockSpec((1, l, 4, fw), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l, 4, fw), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, g, l), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, fw * _WORD), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, g, fw * _WORD), jnp.float32),
+        interpret=interpret,
+    )(q_planes, q_scale, k_planes, k_scale, v_planes, v_scale, bias)

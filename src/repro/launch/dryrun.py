@@ -694,7 +694,10 @@ def main():
                     help="decode-cache residency format (registered in "
                          "repro.core.kvcache.FORMATS); decode-cell cache "
                          "inputs and analytic cache bytes both derive from "
-                         "its abstract_state")
+                         "its abstract_state (int4_bp_fused shares "
+                         "int4_bp's layout — fusion is kernel policy, so "
+                         "its dry-run accounting is identical by "
+                         "construction)")
     ap.add_argument("--scheduler", default=None,
                     help="restrict the decode-cell analytic serving model "
                          "to one registered scheduler (one of "

@@ -16,6 +16,14 @@ come from the result-shape type strings (tuple results summed).  These are
 the collective-term inputs of EXPERIMENTS.md §Roofline; the 'bottleneck
 link' model divides by one ICI link (intra-pod axes) or one DCN link
 ('pod' axis groups) — assumptions documented there.
+
+``op_counts(text)`` / ``dot_count(text)`` tally instruction kinds from
+either lowered StableHLO MLIR (``stablehlo.dot_general``) or compiled HLO
+text (``... = s32[...] dot(...)``).  ``dot_count`` is the fusion guard for
+the bit-plane kernels: the fused single-contraction GEMM must lower to
+exactly ONE dot per tile where the unrolled plane-pair form emits 16 —
+asserted in ``tests/test_bsdp_gemm.py`` so the fusion cannot silently
+regress.
 """
 
 from __future__ import annotations
@@ -52,6 +60,36 @@ def _shape_bytes(type_str: str) -> int:
                     n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
+
+
+#: StableHLO MLIR ops ("%0 = stablehlo.dot_general ...")
+_STABLEHLO_OP_RE = re.compile(r"\bstablehlo\.([a-z_0-9]+)")
+#: compiled HLO text ops ("%name = s32[8,16]{1,0} dot(...)")
+_HLO_OP_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+\[[^\]]*\]\S*)\s+([a-z][a-z0-9-]*)\(")
+
+
+def op_counts(text: str) -> dict:
+    """Instruction-kind tally for StableHLO MLIR or compiled HLO text."""
+    counts: dict = defaultdict(int)
+    for m in _STABLEHLO_OP_RE.finditer(text):
+        counts[m.group(1)] += 1
+    if not counts:  # not MLIR — fall back to the HLO text grammar
+        for line in text.splitlines():
+            m = _HLO_OP_RE.search(line)
+            if m is not None:
+                counts[m.group(1)] += 1
+    return dict(counts)
+
+
+def dot_count(text: str) -> int:
+    """Number of dot/dot-general contractions in the program text.
+
+    For an interpret-mode Pallas call the kernel body is traced once into
+    the grid loop, so this IS the per-tile MXU-dispatch count — the number
+    the fused BSDP kernels exist to shrink (16 → 1).
+    """
+    c = op_counts(text)
+    return c.get("dot_general", 0) + c.get("dot", 0) + c.get("dot-general", 0)
 
 
 @dataclasses.dataclass

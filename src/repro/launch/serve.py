@@ -5,10 +5,13 @@ residency policy — the paper's one-time GEMV-V layout transform — and
 serves synthetic batched requests through the continuous-batching engine,
 reporting throughput and SLO metrics (TTFT/TPOT percentiles from
 ``ServeEngine.stats()``).  The three serving registries each get a flag:
-``--mode`` takes a registered *weight-residency* format name or a
+``--mode`` takes a registered *weight-residency* format name (including
+``bsdp_fused`` — the single-contraction bit-plane GEMM kernel) or a
 per-layer ResidencySpec string; ``--cache-format`` selects the
 *decode-cache* residency (``repro.core.kvcache.FORMATS``: bf16 | int8 |
-int4_bp); ``--scheduler`` selects the *orchestration* policy
+int4_bp | int4_bp_fused, the last serving decode attention through the
+fused Pallas plane kernel); ``--scheduler`` selects the *orchestration*
+policy
 (``repro.serve.scheduler.SCHEDULERS``: fcfs | sjf | token_budget, with
 CLI kwargs like ``token_budget:budget=16``):
 
@@ -47,7 +50,9 @@ def main():
     ap.add_argument("--cache-format", default=None,
                     choices=list(kvcache.formats()),
                     help="decode-cache residency format (default: the "
-                         "arch config's; int4_bp = §IV bit-plane K/V)")
+                         "arch config's; int4_bp = §IV bit-plane K/V, "
+                         "int4_bp_fused = same planes read through the "
+                         "fused Pallas decode-attention kernel)")
     ap.add_argument("--scheduler", default="fcfs",
                     type=sched_lib.make_scheduler,
                     help="orchestration policy (one of "

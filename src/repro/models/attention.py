@@ -239,7 +239,11 @@ def _decode_attention(q, cache, *, cur, window, fmt):
     gather paths: quantized formats fold per-slot scales AFTER the integer
     contraction (``scores = (q·k_int)·scale``, ``out = (w·v_scale)·v_int``)
     and the bit-plane format contracts directly on the stored planes — the
-    f32 cache copy is never materialized.
+    f32 cache copy is never materialized.  A format declaring
+    ``supports_fused_decode`` (``int4_bp_fused``) instead takes the whole
+    qk → masked softmax → av read in one fused kernel call, with the
+    position mask handed over as an additive bias — same semantics, one
+    kernel instead of three XLA computations.
     """
     b, s, hq, dh = q.shape
     hkv = cache["k"].shape[2]
@@ -247,18 +251,28 @@ def _decode_attention(q, cache, *, cur, window, fmt):
     ln = cache["pos_ids"].shape[1]
     qg = q.reshape(b, s, hkv, g, dh).transpose(0, 2, 1, 3, 4)
     qg = qg.reshape(b, hkv, s * g, dh).astype(jnp.float32)
-    scores = fmt.qk(qg, fmt.channel(cache, "k"))  # [B, Hkv, S·G, L]
-    scores = scores / math.sqrt(dh)
     cur = jnp.asarray(cur, jnp.int32)
     cur = jnp.broadcast_to(cur[:, None] if cur.ndim == 1 else cur, (b, s))
     pos_ids = cache["pos_ids"]
     valid = (pos_ids[:, None, :] >= 0) & (pos_ids[:, None, :] <= cur[..., None])
     if window is not None:
         valid &= pos_ids[:, None, :] > (cur[..., None] - window)
-    scores = scores.reshape(b, hkv, s, g, ln)
-    scores = jnp.where(valid[:, None, :, None, :], scores, NEG_INF)
-    w = jax.nn.softmax(scores, axis=-1).reshape(b, hkv, s * g, ln)
-    out = fmt.av(w, fmt.channel(cache, "v"), dh)  # [B, Hkv, S·G, D]
+    if fmt.supports_fused_decode:
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)  # [B,S,L]
+        bias = jnp.broadcast_to(
+            bias[:, None, :, None, :], (b, hkv, s, g, ln)
+        ).reshape(b, hkv, s * g, ln)
+        out = fmt.decode_attention(
+            qg, fmt.channel(cache, "k"), fmt.channel(cache, "v"), bias,
+            sm_scale=1.0 / math.sqrt(dh), feat=dh,
+        )  # [B, Hkv, S·G, D]
+    else:
+        scores = fmt.qk(qg, fmt.channel(cache, "k"))  # [B, Hkv, S·G, L]
+        scores = scores / math.sqrt(dh)
+        scores = scores.reshape(b, hkv, s, g, ln)
+        scores = jnp.where(valid[:, None, :, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).reshape(b, hkv, s * g, ln)
+        out = fmt.av(w, fmt.channel(cache, "v"), dh)  # [B, Hkv, S·G, D]
     out = out.reshape(b, hkv, s, g, dh).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, s, hq, dh).astype(q.dtype)
 

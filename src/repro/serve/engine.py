@@ -204,8 +204,13 @@ class ServeEngine:
 
     ``cache_format`` independently selects the decode-cache residency — a
     name registered in :data:`repro.core.kvcache.FORMATS` (``"bf16"``,
-    ``"int8"``, ``"int4_bp"``).  Cache splice and refill operate on the
-    quantized storage; weight and cache residency compose freely.
+    ``"int8"``, ``"int4_bp"``, ``"int4_bp_fused"`` — the last reads the
+    ring through the fused Pallas decode-attention kernel).  Cache splice
+    and refill operate on the quantized storage; weight and cache
+    residency compose freely — e.g. ``mode="bsdp_fused"`` (one
+    single-contraction MXU call per dense tile) × ``cache_format=
+    "int4_bp_fused"`` serves both dominant payloads through the fused
+    bit-plane kernels.
 
     ``scheduler`` selects the orchestration policy — anything
     :func:`repro.serve.scheduler.make_scheduler` accepts (a registered name

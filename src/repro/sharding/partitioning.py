@@ -257,6 +257,10 @@ def cache_axes_table(cfg=None) -> dict[str, Axes]:
     the registered :class:`repro.core.kvcache.CacheFormat`'s ``data_axes``
     — e.g. the int4 bit-plane payload appends two unsharded plane dims —
     so cache PartitionSpecs can never drift from the real cache layout.
+    The fused kernel formats (``int4_bp_fused``, and ``bsdp_fused`` on the
+    weight side) deliberately subclass/instantiate the same layout classes,
+    so they inherit the ``[N, 4, Kw]`` / ``[..., 4, Fw]`` data_axes
+    contract unchanged — fusion is KernelPolicy data, never a new sharding.
     ``cfg=None`` falls back to the ``bf16`` format (legacy callers).
     """
     from repro.core import kvcache

@@ -1,0 +1,111 @@
+"""Autotuned BSDP block selection (benchmarks/autotune.py + ops hook).
+
+The contract: ``ops._BSDP_BLOCKS`` is the static fallback; winners measured
+per (KernelPolicy kernel name, power-of-two shape class) install through
+``ops.register_tuned_blocks`` and are consulted by ``ops.bsdp_blocks_for``
+inside ``bsdp_matmul_planes`` — changing performance, never results.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import autotune, common
+from repro.core import bitplane
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuned():
+    ops.clear_tuned_blocks()
+    yield
+    ops.clear_tuned_blocks()
+
+
+class TestOpsHook:
+    def test_shape_class_buckets_by_pow2(self):
+        assert ops.bsdp_shape_class(8, 512, 16) == "m8_n512_kw16"
+        # ragged shapes round UP into the same bucket
+        assert ops.bsdp_shape_class(5, 300, 9) == "m8_n512_kw16"
+        assert ops.bsdp_shape_class(1, 1, 1) == "m1_n1_kw1"
+
+    def test_registered_winner_overrides_fallback(self):
+        cls = ops.bsdp_shape_class(32, 2048, 64)
+        fallback = ops.bsdp_blocks_for("gemm_fused", 32, 2048, 64)
+        ops.register_tuned_blocks("gemm_fused", cls, (16, 256, 16))
+        tuned = ops.bsdp_blocks_for("gemm_fused", 32, 2048, 64)
+        assert tuned == (16, 256, 16) != fallback
+        # other shape classes and kernels still use the static table
+        assert ops.bsdp_blocks_for("gemm_fused", 8, 128, 8) != (16, 256, 16)
+        assert ops.bsdp_blocks_for("gemm", 32, 2048, 64) == fallback
+        ops.clear_tuned_blocks()
+        assert ops.bsdp_blocks_for("gemm_fused", 32, 2048, 64) == fallback
+
+    def test_tuned_blocks_clamp_to_small_dims(self):
+        """Tuned preferences still pass through _pick_block, so a cached
+        winner larger than the problem dims clamps instead of over-padding
+        (ragged shapes share their bucket with the pow2 shape)."""
+        cls = ops.bsdp_shape_class(8, 64, 8)
+        ops.register_tuned_blocks("gemm", cls, (128, 256, 64))
+        bm, bn, bkw = ops.bsdp_blocks_for("gemm", 8, 64, 8)
+        assert bm <= 8 and bn <= 128 and bkw <= 8
+
+    def test_unknown_kernel_rejected(self):
+        with pytest.raises(ValueError, match="unknown kernel"):
+            ops.register_tuned_blocks("warp_speed", "m8_n512_kw16", (8, 128, 8))
+        with pytest.raises(ValueError, match="positive"):
+            ops.register_tuned_blocks("gemm", "m8_n512_kw16", (0, 128, 8))
+
+    def test_results_exact_under_tuned_blocks(self):
+        """Acceptance: autotuning changes tiling only — results stay
+        bit-exact vs the decoded-matmul oracle for every kernel."""
+        rng = np.random.default_rng(11)
+        m, k, n = 17, 320, 130
+        a = jnp.array(rng.integers(-8, 8, (m, k)).astype(np.int8))
+        w = jnp.array(rng.integers(-8, 8, (k, n)).astype(np.int8))
+        wp = bitplane.encode_weights(bitplane.pad_to_word(w, axis=0))
+        expected = np.array(ref.bsdp_ref(a, w))
+        kw = -(-k // 32)
+        for kernel in ("gemv", "gemm", "gemm_fused"):
+            ops.register_tuned_blocks(
+                kernel, ops.bsdp_shape_class(m, n, kw), (16, 256, 4))
+            out = ops.bsdp_matmul(a, wp, kernel=kernel)
+            assert (np.array(out) == expected).all(), kernel
+
+
+class TestSweep:
+    def test_smoke_sweep_finds_exact_winners(self):
+        common.set_smoke(True)
+        try:
+            winners = autotune.sweep()
+        finally:
+            common.set_smoke(False)
+        assert winners, "smoke sweep produced no winners"
+        for key, e in winners.items():
+            kernel, cls = key.split("|")
+            assert e["kernel"] == kernel in autotune.CANDIDATES
+            assert e["shape_class"] == cls
+            assert tuple(e["blocks"]) in autotune.CANDIDATES[kernel]
+            assert e["us"] > 0
+        # the sweep itself must not install anything
+        assert not ops._BSDP_TUNED
+
+    def test_cache_roundtrip_and_apply(self, tmp_path):
+        winners = {
+            "gemm_fused|m8_n512_kw16": {
+                "kernel": "gemm_fused", "shape_class": "m8_n512_kw16",
+                "blocks": [64, 128, 16], "us": 123.0,
+            },
+        }
+        path = tmp_path / "tuned.json"
+        autotune.save(winners, str(path))
+        loaded = autotune.load(str(path))
+        assert loaded == winners == json.loads(path.read_text())
+        assert autotune.apply_cache(loaded) == 1
+        assert ops.bsdp_blocks_for("gemm_fused", 8, 512, 16) == (8, 128, 16)
+        assert ops._BSDP_TUNED[("gemm_fused", "m8_n512_kw16")] == (64, 128, 16)

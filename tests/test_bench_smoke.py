@@ -31,7 +31,8 @@ def smoke_output():
 
 class TestBenchSmoke:
     def test_all_suites_emit_rows(self, smoke_output):
-        prefixes = ("arith/", "bsdp/", "transfer/", "gemv_e2e/", "gemv_scale/")
+        prefixes = ("arith/", "bsdp/", "transfer/", "gemv_e2e/",
+                    "gemv_scale/", "autotune/")
         for p in prefixes:
             assert any(
                 line.startswith(p) for line in smoke_output.splitlines()
@@ -45,9 +46,43 @@ class TestBenchSmoke:
         for m in (1, 8):  # smoke sweep
             assert f"bsdp/batch_m{m}_gemv" in smoke_output
             assert f"bsdp/batch_m{m}_gemm" in smoke_output
+            assert f"bsdp/batch_m{m}_gemm_fused" in smoke_output
             assert f"gemv_e2e/V_bsdp_m{m}" in smoke_output
         assert "dispatch=gemv" in smoke_output  # M==1 routed to GEMV kernel
         assert "dispatch=gemm" in smoke_output  # M>1 routed to GEMM kernel
+
+    def test_bsdp_fused_ladder_rows_ordered(self, smoke_output):
+        """The fused single-contraction ladder: bsdp_fused rows present per
+        batch point, with HLO-derived MXU dispatch counts strictly ordered
+        fused (1) < unrolled (16) at M>1 — the 16→1 collapse asserted
+        deterministically, independent of wall-clock noise."""
+        lines = smoke_output.splitlines()
+        dots = {}
+        for mode in ("bsdp", "bsdp_fused"):
+            for m in (1, 8):
+                line = next(
+                    l for l in lines
+                    if l.startswith(f"gemv_e2e/V_{mode}_m{m},"))
+                assert "dots_per_call=" in line, line
+                dots[(mode, m)] = int(
+                    line.split("dots_per_call=")[1].split(";")[0])
+        # M==1 dispatches both modes to the popcount GEMV kernel: no dots
+        assert dots[("bsdp", 1)] == dots[("bsdp_fused", 1)] == 0
+        assert dots[("bsdp_fused", 8)] == 1
+        assert dots[("bsdp", 8)] == 16
+        # kernel-level sweep carries the unrolled:fused timing ratio
+        assert "unrolled_over_fused=" in smoke_output
+
+    def test_autotune_rows_present(self, smoke_output):
+        """The block-selection sweep reports a winner per (kernel, shape
+        class), keyed by KernelPolicy kernel name."""
+        lines = [l for l in smoke_output.splitlines()
+                 if l.startswith("autotune/")]
+        kernels = {l.split(",")[0].split("/")[1].rsplit("_m", 1)[0]
+                   for l in lines}
+        assert {"gemm", "gemm_fused"} <= kernels, lines
+        for l in lines:
+            assert "blocks=" in l and "candidates=" in l
 
     def test_mixed_residency_row_present(self, smoke_output):
         """The per-layer ResidencySpec policy path stays benchmarked."""
@@ -62,15 +97,17 @@ class TestBenchSmoke:
         each reporting resident cache MB + tok/s, bytes strictly ordered
         int4_bp < int8 < bf16."""
         ratios = {}
-        for fmt in ("bf16", "int8", "int4_bp"):
+        for fmt in ("bf16", "int8", "int4_bp", "int4_bp_fused"):
             line = next(
                 l for l in smoke_output.splitlines()
-                if l.startswith(f"gemv_e2e/kv_cache_{fmt}")
+                if l.startswith(f"gemv_e2e/kv_cache_{fmt},")
             )
             assert "cache_mb=" in line and "tokens_per_s=" in line
             ratios[fmt] = float(
                 line.split("ratio_vs_bf16=")[1].split(";")[0])
         assert ratios["int4_bp"] < ratios["int8"] < ratios["bf16"] == 1.0
+        # fusion is kernel policy, not layout: identical resident bytes
+        assert ratios["int4_bp_fused"] == ratios["int4_bp"]
 
     def test_scheduler_trace_rows_present(self, smoke_output):
         """The traffic-trace scheduler ladder: one row per registered

@@ -1,10 +1,15 @@
-"""Batched bit-serial GEMM kernel: parity sweeps + dispatch routing.
+"""Batched bit-serial GEMM kernels: parity sweeps + dispatch routing.
 
-The GEMM kernel (``repro.kernels.bsdp_gemm``) must be integer-exact vs
-BOTH oracles — the decoded int32 matmul (:func:`ref.bsdp_gemm_ref`, the
-definition) and the plain int matmul of the raw int4 payloads
-(:func:`ref.bsdp_ref`) — and ``ops`` must route M==1 to the popcount GEMV
-kernel and M>1 to the GEMM kernel.
+BOTH GEMM kernels (``repro.kernels.bsdp_gemm``: the unrolled 16-matmul
+plane-pair form and the fused single-contraction form) must be
+integer-exact vs BOTH oracles — the decoded int32 matmul
+(:func:`ref.bsdp_gemm_ref`, the definition) and the plain int matmul of
+the raw int4 payloads (:func:`ref.bsdp_ref`) — and mutually bit-identical.
+``ops`` must route M==1 to the popcount GEMV kernel and M>1 to the GEMM
+kernel; the ``bsdp_fused`` residency format's KernelPolicy must reach the
+fused kernel with zero dispatch-site edits.  The ``hlo_stats`` dot-count
+guard pins the fusion property itself: one dot-general per tile for
+``gemm_fused`` vs 16 for ``gemm``.
 """
 
 import jax
@@ -17,6 +22,8 @@ from repro.core import bitplane
 from repro.kernels import bsdp_gemm, bsdp_kernel, ops, ref
 
 jax.config.update("jax_platform_name", "cpu")
+
+GEMM_KERNELS = ("gemm", "gemm_fused")
 
 # Ragged M/N/K (padding in every dim), aligned tiles, and degenerate M==1.
 SHAPES = [
@@ -39,12 +46,13 @@ def _encoded(rng, m, k, n, signed):
 
 
 class TestBsdpGemmKernel:
+    @pytest.mark.parametrize("kernel", GEMM_KERNELS)
     @pytest.mark.parametrize("m,k,n", SHAPES)
     @pytest.mark.parametrize("signed", [True, False])
-    def test_exact_vs_oracles(self, m, k, n, signed):
+    def test_exact_vs_oracles(self, kernel, m, k, n, signed):
         rng = np.random.default_rng(m * 31 + k + n + signed)
         a, w, wp = _encoded(rng, m, k, n, signed)
-        out = ops.bsdp_matmul(a, wp, signed=signed, kernel="gemm")
+        out = ops.bsdp_matmul(a, wp, signed=signed, kernel=kernel)
         # vs the decoded int32 matmul definition
         assert bool(jnp.all(out == ref.bsdp_ref(a, w)))
         # vs the plane-level decode oracle
@@ -52,27 +60,44 @@ class TestBsdpGemmKernel:
         exp = ref.bsdp_gemm_ref(ap, wp, signed=signed)
         assert bool(jnp.all(out == exp))
 
+    @pytest.mark.parametrize("m,k,n", SHAPES)
     @pytest.mark.parametrize("signed", [True, False])
-    def test_m1_degenerate_matches_gemv_kernel_bitforbit(self, signed):
-        """At M==1 the GEMM kernel and the popcount GEMV kernel must agree
+    def test_fused_equals_unrolled_bitforbit(self, m, k, n, signed):
+        """Acceptance: gemm_fused == gemm on every bit, every shape —
+        fusing the 16 plane-pair matmuls into one contraction is a pure
+        dispatch transformation."""
+        rng = np.random.default_rng(m * 17 + k + n + signed)
+        a, _, wp = _encoded(rng, m, k, n, signed)
+        ap = bitplane.encode_acts(bitplane.pad_to_word(a))
+        unrolled = ops.bsdp_matmul_planes(ap, wp, signed=signed, kernel="gemm")
+        fused = ops.bsdp_matmul_planes(
+            ap, wp, signed=signed, kernel="gemm_fused")
+        assert unrolled.dtype == fused.dtype == jnp.int32
+        assert bool(jnp.all(unrolled == fused))
+
+    @pytest.mark.parametrize("kernel", GEMM_KERNELS)
+    @pytest.mark.parametrize("signed", [True, False])
+    def test_m1_degenerate_matches_gemv_kernel_bitforbit(self, kernel, signed):
+        """At M==1 the GEMM kernels and the popcount GEMV kernel must agree
         on every bit of the int32 output."""
         rng = np.random.default_rng(signed)
         a, _, wp = _encoded(rng, 1, 320, 130, signed)
         ap = bitplane.encode_acts(bitplane.pad_to_word(a))
-        via_gemm = ops.bsdp_matmul_planes(ap, wp, signed=signed, kernel="gemm")
+        via_gemm = ops.bsdp_matmul_planes(ap, wp, signed=signed, kernel=kernel)
         via_gemv = ops.bsdp_matmul_planes(ap, wp, signed=signed, kernel="gemv")
         assert via_gemm.dtype == via_gemv.dtype == jnp.int32
         assert bool(jnp.all(via_gemm == via_gemv))
 
-    def test_block_size_invariance(self):
+    @pytest.mark.parametrize("kernel", GEMM_KERNELS)
+    def test_block_size_invariance(self, kernel):
         """Result must not depend on tiling — catches accumulation bugs."""
         rng = np.random.default_rng(21)
         a, w, wp = _encoded(rng, 32, 2048, 256, True)
         ap = bitplane.encode(a)
         base = ref.bsdp_ref(a, w)
         for bm, bn, bkw in [(8, 128, 8), (32, 128, 64), (16, 256, 32)]:
-            out = ops.bsdp_matmul_planes(ap, wp, kernel="gemm", bm=bm, bn=bn, bkw=bkw)
-            assert bool(jnp.all(out == base)), (bm, bn, bkw)
+            out = ops.bsdp_matmul_planes(ap, wp, kernel=kernel, bm=bm, bn=bn, bkw=bkw)
+            assert bool(jnp.all(out == base)), (kernel, bm, bn, bkw)
 
     def test_unknown_kernel_rejected(self):
         rng = np.random.default_rng(3)
@@ -80,6 +105,71 @@ class TestBsdpGemmKernel:
         ap = bitplane.encode_acts(bitplane.pad_to_word(a))
         with pytest.raises(ValueError):
             ops.bsdp_matmul_planes(ap, wp, kernel="mxu")
+
+    def test_unknown_kernel_error_names_kernel_and_format(self):
+        """Satellite: the block-selection error carries BOTH the requested
+        kernel and the residency format that routed it, so a
+        mixed-ResidencySpec misconfiguration traces back to its policy
+        entry instead of a bare kernel string."""
+        from repro.core.residency import BitPlaneFormat, KernelPolicy
+
+        rng = np.random.default_rng(4)
+        a, _, wp = _encoded(rng, 2, 64, 16, True)
+        ap = bitplane.encode_acts(bitplane.pad_to_word(a))
+        with pytest.raises(ValueError) as exc:
+            ops.bsdp_matmul_planes(
+                ap, wp, kernel="mxu_typo", fmt_name="my_ffn_policy")
+        msg = str(exc.value)
+        assert "mxu_typo" in msg and "my_ffn_policy" in msg
+        assert "gemm_fused" in msg  # the registered alternatives are listed
+        # the full format.apply route tags errors the same way
+        bad = BitPlaneFormat(
+            "t_bad_policy", KernelPolicy(gemv="nope", gemm="nope"))
+        w = jnp.array(rng.normal(size=(64, 128)).astype(np.float32))
+        x = jnp.array(rng.normal(size=(2, 64)).astype(np.float32))
+        with pytest.raises(ValueError, match="t_bad_policy"):
+            bad.apply(bad.encode(w), x)
+
+
+class TestFusedLowering:
+    """CI fusion guard: the kernels' per-tile MXU dispatch counts, straight
+    from the lowered HLO via ``hlo_stats`` — the 16→1 collapse cannot
+    silently regress."""
+
+    def _single_tile_operands(self):
+        # m=8, n=128, k=1024 → exactly one (bm, bn, bkw) grid step for both
+        # kernels' default blocks, so program dots == dots per tile.
+        rng = np.random.default_rng(5)
+        a, _, wp = _encoded(rng, 8, 1024, 128, True)
+        return bitplane.encode_acts(bitplane.pad_to_word(a)), wp
+
+    @pytest.mark.parametrize("kernel,expected", [("gemm", 16), ("gemm_fused", 1)])
+    def test_dot_generals_per_tile(self, kernel, expected):
+        from repro.launch import hlo_stats
+
+        ap, wp = self._single_tile_operands()
+        fn = jax.jit(
+            lambda x, w, _k=kernel: ops.bsdp_matmul_planes(x, w, kernel=_k))
+        txt = fn.lower(ap, wp).as_text()
+        assert hlo_stats.dot_count(txt) == expected, kernel
+
+    def test_fused_cache_score_kernel_single_contraction(self):
+        """The decode-score twin: planes_gemm_fused lowers to ONE
+        dot-general where planes_gemm needs two (pair table + weighting)."""
+        from repro.core import kvcache
+        from repro.core.residency import KernelPolicy
+        from repro.launch import hlo_stats
+
+        counts = {}
+        for kern in ("planes_gemm", "planes_gemm_fused"):
+            fmt = kvcache.BitPlaneCacheFormat(
+                f"t_{kern}", KernelPolicy(gemv=kern, gemm=kern))
+            store = fmt.abstract_state(2, 16, (3,), 40)
+            q = jax.ShapeDtypeStruct((2, 3, 4, 40), jnp.float32)
+            txt = jax.jit(fmt.qk).lower(q, store).as_text()
+            counts[kern] = hlo_stats.dot_count(txt)
+        assert counts["planes_gemm_fused"] == 1
+        assert counts["planes_gemm"] == 2
 
 
 class TestDispatch:
@@ -118,6 +208,39 @@ class TestDispatch:
         rng = np.random.default_rng(7)
         a, w, wp = _encoded(rng, 4, 96, 20, True)
         assert bool(jnp.all(ops.bsdp_gemv(a, wp) == ref.bsdp_ref(a, w)))
+
+    @pytest.mark.parametrize("mode,m,expected", [
+        ("bsdp", 8, "gemm"),
+        ("bsdp_fused", 8, "gemm_fused"),
+        ("bsdp_fused", 1, "gemv"),
+    ])
+    def test_format_kernel_policy_reaches_kernel(self, mode, m, expected,
+                                                 monkeypatch):
+        """Acceptance: gemm_fused is selectable purely through the
+        residency format's KernelPolicy — format.apply invokes the fused
+        Pallas kernel with zero dispatch-site edits."""
+        from repro.core import residency
+
+        calls = []
+        spies = {
+            "gemv": (bsdp_kernel, "bsdp_matmul"),
+            "gemm": (bsdp_gemm, "bsdp_gemm"),
+            "gemm_fused": (bsdp_gemm, "bsdp_gemm_fused"),
+        }
+        for name, (mod, attr) in spies.items():
+            real = getattr(mod, attr)
+            monkeypatch.setattr(
+                mod, attr,
+                lambda *a, _n=name, _r=real, **kw:
+                    calls.append(_n) or _r(*a, **kw),
+            )
+        rng = np.random.default_rng(m)
+        w = jnp.array(rng.normal(size=(64, 128)).astype(np.float32))
+        x = jnp.array(rng.normal(size=(m, 64)).astype(np.float32))
+        fmt = residency.get_format(mode)
+        out = fmt.apply(fmt.encode(w), x)
+        assert calls == [expected]
+        assert out.shape == (m, 128)
 
 
 @settings(max_examples=15, deadline=None)

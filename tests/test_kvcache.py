@@ -63,10 +63,27 @@ class TestCacheRegistry:
     """Acceptance: FORMATS ships ≥3 formats; abstract == real bytes."""
 
     def test_registry_ships_three_formats(self):
-        assert set(kvcache.formats()) >= {"bf16", "int8", "int4_bp"}
+        assert set(kvcache.formats()) >= {
+            "bf16", "int8", "int4_bp", "int4_bp_fused"}
         assert kvcache.FORMATS["int4_bp"].is_bitplane
         with pytest.raises(ValueError, match="unknown cache format"):
             kvcache.get_cache_format("fp3_nope")
+
+    def test_fused_format_shares_int4_bp_layout(self):
+        """int4_bp_fused is pure kernel policy: identical storage layout,
+        bytes and sharding axes to int4_bp — only the decode read fuses."""
+        bp = kvcache.get_cache_format("int4_bp")
+        fused = kvcache.get_cache_format("int4_bp_fused")
+        assert isinstance(fused, kvcache.BitPlaneCacheFormat)
+        assert fused.is_bitplane and fused.supports_fused_decode
+        assert not bp.supports_fused_decode
+        for lead, feat in ((GQA_LEAD, GQA_FEAT), (MLA_LEAD, MLA_FEAT)):
+            a, b = bp.abstract_state(2, 16, lead, feat), \
+                fused.abstract_state(2, 16, lead, feat)
+            assert {k: (v.shape, v.dtype) for k, v in a.items()} == \
+                {k: (v.shape, v.dtype) for k, v in b.items()}
+            assert bp.slot_bytes(lead, feat) == fused.slot_bytes(lead, feat)
+            assert bp.data_axes(lead) == fused.data_axes(lead)
 
     @pytest.mark.parametrize("mode", kvcache.formats())
     @pytest.mark.parametrize("lead,feat", [(GQA_LEAD, GQA_FEAT),
@@ -145,24 +162,43 @@ class TestCacheRegistry:
         assert engine.resident_bytes(eng.params) == breakdown["weights"]
 
     def test_popcount_and_planes_gemm_agree_exactly(self):
-        """Both int4_bp score kernels are the same integer math (Algorithm 2
-        == plane-pair 0/1 matmuls) — bit-for-bit, like the weight kernels."""
+        """All three int4_bp score kernels are the same integer math
+        (Algorithm 2 == plane-pair 0/1 matmuls == the fused
+        single-contraction form) — bit-for-bit, like the weight kernels."""
         rng = np.random.default_rng(1)
         pop = kvcache.BitPlaneCacheFormat(
             "t_pop", KernelPolicy(gemv="popcount", gemm="popcount"))
         gemm = kvcache.BitPlaneCacheFormat(
             "t_gemm", KernelPolicy(gemv="planes_gemm", gemm="planes_gemm"))
+        fused = kvcache.BitPlaneCacheFormat(
+            "t_fused",
+            KernelPolicy(gemv="planes_gemm_fused", gemm="planes_gemm_fused"))
         store = pop.init(2, 16, (3,), 40)
         x = jnp.array(rng.normal(size=(2, 16, 3, 40)).astype(np.float32))
         slots = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
         store = pop.append(store, x, jnp.arange(2)[:, None], slots)
         q = jnp.array(rng.normal(size=(2, 3, 4, 40)).astype(np.float32))
-        assert bool(jnp.all(pop.qk(q, store) == gemm.qk(q, store)))
+        s_pop = pop.qk(q, store)
+        assert bool(jnp.all(s_pop == gemm.qk(q, store)))
+        assert bool(jnp.all(s_pop == fused.qk(q, store)))
+
+    def test_unknown_score_kernel_names_format(self):
+        """Satellite: a bad score-kernel name errors with BOTH the kernel
+        and the cache format that requested it."""
+        rng = np.random.default_rng(1)
+        bad = kvcache.BitPlaneCacheFormat(
+            "t_bad_cache", KernelPolicy(gemv="planes_typo", gemm="planes_typo"))
+        store = bad.init(1, 8, (2,), 32)
+        q = jnp.array(rng.normal(size=(1, 2, 4, 32)).astype(np.float32))
+        with pytest.raises(ValueError) as exc:
+            bad.qk(q, store)
+        assert "planes_typo" in str(exc.value)
+        assert "t_bad_cache" in str(exc.value)
 
     def test_kernel_policy_is_data(self):
         fmt = kvcache.get_cache_format("int4_bp")
         assert fmt.kernel_policy.kernel_for(1) == "popcount"
-        assert fmt.kernel_policy.kernel_for(8) == "planes_gemm"
+        assert fmt.kernel_policy.kernel_for(8) == "planes_gemm_fused"
 
     def test_format_for_resolves_legacy_kv_quant(self):
         assert kvcache.format_for(_cfg()).name == "bf16"
@@ -255,13 +291,74 @@ class TestRingWraparound:
             return outs, caches
 
         ref, _ = run("bf16")
-        for mode, tol in (("int8", 0.25), ("int4_bp", 0.5)):
+        for mode, tol in (("int8", 0.25), ("int4_bp", 0.5),
+                          ("int4_bp_fused", 0.5)):
             got, caches = run(mode)
             for step, (r, g) in enumerate(zip(ref, got)):
                 _rel_close(r, g, tol=tol)
             # the ring really wrapped: slots hold positions 4..19, not 0..15
             pos_ids = np.sort(np.asarray(_first_pos_ids(caches))[0])
             assert pos_ids.min() == 4 and pos_ids.max() == 19
+
+    def test_fused_decode_attention_matches_jnp_plane_math(self):
+        """Acceptance: the fused Pallas decode-attention kernel reproduces
+        the int4_bp jnp plane math (the reference semantics) — the integer
+        scores are identical, so the whole read agrees to float rounding —
+        including ring wraparound (positions past cache_len) and a chunk
+        append with padded rows."""
+        cfg = _cfg()
+
+        def run(mode, s, positions):
+            rng = np.random.default_rng(7)
+            c = dataclasses.replace(cfg, cache_format=mode)
+            fmt = kvcache.format_for(c)
+            cache = attention.init_kv_cache(c, 2, 8)
+            # fill all 8 slots, then 4 more writes → ring wrapped to 4..11
+            for lo in (0, 4, 8):
+                k = jnp.array(rng.normal(
+                    size=(2, 4, cfg.n_kv_heads, cfg.d_head)).astype(np.float32))
+                v = jnp.array(rng.normal(
+                    size=(2, 4, cfg.n_kv_heads, cfg.d_head)).astype(np.float32))
+                pos = jnp.broadcast_to(jnp.arange(lo, lo + 4)[None], (2, 4))
+                cache = attention._ring_write(cache, k, v, pos, fmt)
+            q = jnp.array(rng.normal(
+                size=(2, s, cfg.n_heads, cfg.d_head)).astype(np.float32))
+            return attention._decode_attention(
+                q, cache, cur=positions, window=None, fmt=fmt)
+
+        for s, positions in (
+            (1, jnp.array([11, 9])),            # single-token, wrapped ring
+            (2, jnp.array([[10, 11], [-1, 9]])),  # chunk + one padded row
+        ):
+            ref = np.asarray(run("int4_bp", s, positions), np.float32)
+            fused = np.asarray(run("int4_bp_fused", s, positions), np.float32)
+            # compare only non-pad rows (pad rows are discarded downstream)
+            pos = np.broadcast_to(
+                np.asarray(positions).reshape(2, -1), (2, s))
+            live = pos >= 0
+            np.testing.assert_allclose(
+                ref[live], fused[live], rtol=1e-4, atol=1e-4)
+
+    def test_mla_decode_works_under_fused_format(self):
+        """MLA keeps the qk/av path (its score mixes a float rope term
+        before the softmax), so int4_bp_fused must serve MLA decode via the
+        inherited jnp plane math — identically to int4_bp."""
+        cfg = _cfg("minicpm3-4b")
+        params = _params(cfg)
+        rng = np.random.default_rng(3)
+        prompt = jnp.array(rng.integers(0, VOCAB, (1, 6)), jnp.int32)
+        tok = jnp.full((1, 1), 7, jnp.int32)
+
+        def run(mode):
+            c = dataclasses.replace(cfg, cache_format=mode)
+            _, caches = model_lib.prefill(
+                params, {"tokens": prompt}, c, tp=1, max_len=16)
+            lg, _ = model_lib.decode_step(
+                params, tok, caches, jnp.int32(6), c, tp=1)
+            return np.asarray(lg[0, 0, :VOCAB])
+
+        np.testing.assert_allclose(
+            run("int4_bp"), run("int4_bp_fused"), rtol=1e-5, atol=1e-5)
 
     def test_ring_write_drops_negative_positions(self):
         """Left-pad positions (< 0) must not touch the ring (the scatter
@@ -308,7 +405,8 @@ class TestServeCacheFormats:
         eng.run()
         return eng
 
-    @pytest.mark.parametrize("cache_format", ["int8", "int4_bp"])
+    @pytest.mark.parametrize("cache_format",
+                             ["int8", "int4_bp", "int4_bp_fused"])
     def test_quantized_cache_engine_matches_bf16(self, cache_format):
         cfg = _cfg()
         params = _params(cfg)
@@ -343,6 +441,34 @@ class TestServeCacheFormats:
         assert eng.cache_format == "int4_bp"
         for (_, _, lr), (_, _, lg) in zip(ref.logit_trace, eng.logit_trace):
             _rel_close(lr, lg)
+
+    def test_fused_weights_and_fused_cache_compose(self):
+        """Acceptance: a 3-step continuous-batching serve run (with the
+        mid-stream refill) under gemm_fused weights × bit-plane cache stays
+        within int4 tolerance of bf16 — the all-fused serving pairing,
+        selected purely through mode/cache_format strings."""
+        cfg = _cfg()
+        params = _params(cfg)
+        ref = self._run(params, cfg, "bf16")
+        for cache_format in ("int4_bp", "int4_bp_fused"):
+            rng = np.random.default_rng(0)
+            eng = engine.ServeEngine(
+                params, cfg, slots=2, max_len=32, mode="bsdp_fused",
+                cache_format=cache_format, min_dim=16, trace_logits=True,
+            )
+            for n, mn in zip((5, 3, 7), (6, 2, 4)):
+                eng.submit(
+                    rng.integers(0, VOCAB, size=(n,)).astype(np.int32), mn,
+                    force=rng.integers(0, VOCAB, size=(mn,)).astype(np.int32),
+                )
+            eng.run()
+            assert eng.mode == "bsdp_fused"
+            kinds = [(k, s) for k, s, _ in ref.logit_trace]
+            assert kinds == [(k, s) for k, s, _ in eng.logit_trace]
+            assert sum(1 for k, _ in kinds if k == "decode") >= 3
+            for (_, _, lr), (_, _, lg) in zip(ref.logit_trace,
+                                              eng.logit_trace):
+                _rel_close(lr, lg)
 
 
 class TestMicrobatchedRefill:

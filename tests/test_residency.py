@@ -160,11 +160,33 @@ class TestRegistryConsistency:
     def test_kernel_policy_is_data(self):
         bsdp = residency.get_format("bsdp")
         faithful = residency.get_format("w4a4_bsdp")
+        fused = residency.get_format("bsdp_fused")
         assert bsdp.kernel_policy.kernel_for(1) == "gemv"
         assert bsdp.kernel_policy.kernel_for(8) == "gemm"
         assert faithful.kernel_policy.kernel_for(8) == "gemv"
-        assert bsdp.is_bitplane and faithful.is_bitplane
+        assert fused.kernel_policy.kernel_for(1) == "gemv"
+        assert fused.kernel_policy.kernel_for(8) == "gemm_fused"
+        assert bsdp.is_bitplane and faithful.is_bitplane and fused.is_bitplane
         assert not residency.get_format("w8a8").is_bitplane
+
+    def test_fused_format_keeps_bitplane_layout_contract(self):
+        """bsdp_fused is pure KernelPolicy data over the SAME [N, 4, Kw]
+        payload: abstract state, byte accounting and the data_axes sharding
+        contract (N on the model axis, plane dims unsharded) are identical
+        to bsdp — so every sharding/dry-run consumer is untouched."""
+        bsdp = residency.get_format("bsdp")
+        fused = residency.get_format("bsdp_fused")
+        a, b = bsdp.abstract_state(K_ODDISH, N_SMALL), \
+            fused.abstract_state(K_ODDISH, N_SMALL)
+        assert a.data.shape == b.data.shape and a.data.dtype == b.data.dtype
+        assert bsdp.qbytes() == fused.qbytes()
+        assert bsdp.data_axes("k", "n") == fused.data_axes("k", "n") == \
+            ("n", None, None)
+        rng = np.random.default_rng(9)
+        w = jnp.array(rng.normal(size=(64, 128)).astype(np.float32))
+        # encodings are byte-identical: switching kernels never re-encodes
+        np.testing.assert_array_equal(
+            np.asarray(bsdp.encode(w).data), np.asarray(fused.encode(w).data))
 
     def test_unknown_format_raises(self):
         with pytest.raises(ValueError, match="unknown residency format"):

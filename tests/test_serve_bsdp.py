@@ -1,4 +1,4 @@
-"""Serve-path regression: ServeEngine mode="bsdp" vs mode="bf16".
+"""Serve-path regression: ServeEngine mode="bsdp"/"bsdp_fused" vs "bf16".
 
 The engine converts weights to bit-plane residency once at construction and
 then serves batched prefill + continuous-batched decode through the BSDP
@@ -50,10 +50,11 @@ def _run_engine(params, cfg, mode):
 
 
 class TestServeBsdpRegression:
-    def test_bsdp_logits_match_bf16_within_quant_tolerance(self):
+    @pytest.mark.parametrize("mode", ["bsdp", "bsdp_fused"])
+    def test_bsdp_logits_match_bf16_within_quant_tolerance(self, mode):
         cfg, params = _setup()
         ref_eng, ref_reqs = _run_engine(params, cfg, "bf16")
-        bsdp_eng, bsdp_reqs = _run_engine(params, cfg, "bsdp")
+        bsdp_eng, bsdp_reqs = _run_engine(params, cfg, mode)
 
         # identical schedule: same trace structure, incl. the mid-stream
         # refill prefill, and identical (teacher-forced) token streams
