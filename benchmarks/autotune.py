@@ -55,9 +55,21 @@ SMOKE_SHAPES = ((8, 512, 256),)
 SMOKE_KERNELS = ("gemm", "gemm_fused")
 
 
+def env_key() -> str:
+    """Environment stamp cached winners are keyed by: tuned blocks are only
+    valid for the jax version and backend that measured them (a CPU
+    interpret-mode winner is meaningless on a TPU, and kernel lowering
+    changes across jax releases)."""
+    import jax
+
+    return f"{jax.__version__}|{jax.default_backend()}"
+
+
 def sweep(shapes=None, kernels=None) -> dict:
     """Time every candidate; return ``{"kernel|shape_class": entry}`` where
-    entry = ``{"kernel", "shape_class", "blocks": [bm, bn, bkw], "us"}``.
+    entry = ``{"kernel", "shape_class", "blocks": [bm, bn, bkw], "us",
+    "env"}`` (``env`` = :func:`env_key`, checked at :func:`apply_cache`
+    time so stale caches re-tune instead of installing wrong blocks).
 
     Pure measurement — nothing is installed into ``ops`` (use
     :func:`apply_cache` for that), so running the sweep never perturbs
@@ -93,17 +105,29 @@ def sweep(shapes=None, kernels=None) -> dict:
                 "shape_class": cls,
                 "blocks": list(best[0]),
                 "us": best[1] * 1e6,
+                "env": env_key(),
             }
     return winners
 
 
-def apply_cache(cache: dict) -> int:
-    """Install cached winners into the ops lookup hook; returns the count."""
+def apply_cache(cache: dict) -> tuple[int, int]:
+    """Install cached winners into the ops lookup hook; returns
+    ``(installed, stale)``.  Entries whose ``env`` stamp doesn't match the
+    current jax version + backend (or that predate stamping) are skipped —
+    installing a winner measured under a different lowering would silently
+    pin wrong block shapes; the static table stays the fallback and the
+    caller should re-tune."""
+    env = env_key()
+    installed = stale = 0
     for entry in cache.values():
+        if entry.get("env") != env:
+            stale += 1
+            continue
         ops.register_tuned_blocks(
             entry["kernel"], entry["shape_class"], tuple(entry["blocks"])
         )
-    return len(cache)
+        installed += 1
+    return installed, stale
 
 
 def save(cache: dict, path: str) -> None:
@@ -150,8 +174,10 @@ def main() -> None:
     if args.apply:
         if not args.cache:
             raise SystemExit("--apply requires --cache")
-        n = apply_cache(load(args.cache))
-        print(f"installed {n} tuned block entries from {args.cache}")
+        installed, stale = apply_cache(load(args.cache))
+        print(f"installed {installed} tuned block entries from "
+              f"{args.cache}" + (f" ({stale} stale entries skipped — "
+                                 "re-run the sweep)" if stale else ""))
         return
     winners = sweep()
     if args.cache:

@@ -40,6 +40,11 @@ bit-plane-resident — reporting tok/s and p50/p95 TTFT in deterministic
 work units (processed batch positions).  token_budget's chunked prefill
 keeps the short requests' TTFT bounded by its budget instead of the long
 prompt's length.
+
+The ``sched_prefix_*`` rows extend the ladder to the fourth registry
+concept (pages): a shared-prefix trace served paged vs unpaged at the same
+cache-byte budget, showing radix prefix sharing buying ≥2× concurrent slot
+capacity (see :func:`_prefix_sharing_rows`).
 """
 
 from __future__ import annotations
@@ -124,6 +129,7 @@ def run() -> list[str]:
     rows.append(_mixed_residency_row())
     rows.extend(_kv_cache_rows())
     rows.extend(_scheduler_rows())
+    rows.extend(_prefix_sharing_rows())
     return rows
 
 
@@ -269,6 +275,85 @@ def _scheduler_rows() -> list[str]:
             f"ttft_work_p95={st.percentile('ttft_work', 95):.1f};"
             f"steps={st.steps}",
         ))
+    return rows
+
+
+def _prefix_sharing_rows() -> list[str]:
+    """Paged prefix-sharing ladder: slot capacity at fixed cache bytes.
+
+    The same shared-prefix trace (every prompt = one 24-token system
+    prefix + a 2-token divergent suffix) runs twice under the
+    ``prefix_cache`` scheduler:
+
+      sched_prefix_unpaged   contiguous int4_bp rings, ``slots`` sized so
+                             the ring bytes ARE the budget
+      sched_prefix_paged     paged_int4_bp over a page pool holding the
+                             SAME token capacity (``slots × pages/slot``
+                             pages) but exposing 2× the slots — radix
+                             prefix sharing maps the common prefix pages
+                             once, so twice as many requests decode
+                             concurrently in the same cache bytes
+
+    Reported: max concurrent slots, live cache MB, tok/s, and the pool's
+    peak shared-page fraction / prefix hits / COW count — asserted by
+    ``tests/test_bench_smoke.py`` (≥2× concurrency, shared fraction > 0,
+    byte budget held within pos-id noise).
+    """
+    import time
+
+    from repro.configs import get_smoke_config
+    from repro.core import kvcache
+    from repro.models import model as model_lib
+    from repro.serve import engine
+    from repro.sharding import partitioning as P
+
+    cfg = get_smoke_config("qwen3-1.7b").scaled(n_layers=2, vocab_size=128)
+    params = P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, 128, size=(24,)).astype(np.int32)
+    n_req, max_new = (6, 3) if common.SMOKE else (12, 6)
+    prompts = [
+        np.concatenate([prefix,
+                        rng.integers(0, 128, size=(2,)).astype(np.int32)])
+        for _ in range(n_req)
+    ]
+    base_slots, max_len, page = 2, 32, 8
+
+    rows = []
+    variants = (
+        ("unpaged", "int4_bp", base_slots, None),
+        ("paged", "paged_int4_bp", 2 * base_slots,
+         base_slots * (max_len // page)),
+    )
+    for tag, fmt, slots, pool_pages in variants:
+        eng = engine.ServeEngine(
+            params, cfg, slots=slots, max_len=max_len, mode="bsdp",
+            cache_format=fmt, scheduler="prefix_cache", min_dim=16,
+            page_pool_pages=pool_pages,
+        )
+        for p in prompts:
+            eng.submit(p, max_new)
+        concurrent_max, shared_max = 0, 0.0
+        t0 = time.perf_counter()
+        while eng.step():
+            concurrent_max = max(
+                concurrent_max, sum(r is not None for r in eng.active))
+            if eng.page_pool is not None:
+                shared_max = max(
+                    shared_max, eng.page_pool.stats()["shared_fraction"])
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        kv_mb = kvcache.cache_resident_bytes(eng.caches) / 1e6
+        derived = (f"slots={slots};concurrent_max={concurrent_max};"
+                   f"kv_mb={kv_mb:.3f};tokens_per_s={st.tok_per_s:.1f}")
+        if st.pages is not None:
+            derived += (f";shared_frac_max={shared_max:.2f};"
+                        f"prefix_hits={st.pages['prefix_hits']};"
+                        f"tokens_saved={st.pages['prefix_tokens_saved']};"
+                        f"cow={st.pages['cow_copies']};"
+                        f"evictions={st.pages['evictions']}")
+        rows.append(row(f"gemv_e2e/sched_prefix_{tag}",
+                        dt / max(st.total_tokens, 1), derived))
     return rows
 
 

@@ -18,13 +18,28 @@ One:     ``PYTHONPATH=src python -m benchmarks.run --only bsdp``
 CI:      ``PYTHONPATH=src python -m benchmarks.run --smoke``  (1 iteration,
          small shapes, interpret-mode kernels — asserted by
          ``tests/test_bench_smoke.py`` so benchmark bit-rot is tier-1)
+JSON:    ``--json BENCH_smoke.json`` additionally writes the rows as a
+         machine-readable artifact; the checked-in ``BENCH_smoke.json``
+         records which ladder rows the smoke harness produces (timings are
+         container noise — only the row NAMES and derived keys are
+         contract, asserted by ``tests/test_bench_smoke.py``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    entry: dict = {"name": name, "us_per_call": float(us)}
+    for kv in filter(None, derived.split(";")):
+        k, _, v = kv.partition("=")
+        entry.setdefault("derived", {})[k] = v
+    return entry
 
 
 def main() -> None:
@@ -32,6 +47,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="1 iteration, reduced shapes (CI bit-rot check)")
+    ap.add_argument("--json", default=None,
+                    help="also write rows to this path as a JSON list of "
+                         "{name, us_per_call, derived{...}} records")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -61,15 +79,20 @@ def main() -> None:
         suites = {args.only: suites[args.only]}
 
     print("name,us_per_call,derived")
-    failed = []
+    failed, rows = [], []
     for name, fn in suites.items():
         try:
             for line in fn():
                 print(line, flush=True)
+                rows.append(line)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([_parse_row(r) for r in rows], f, indent=2)
+            f.write("\n")
     if failed:
         raise SystemExit(f"benchmark suites failed: {failed}")
 

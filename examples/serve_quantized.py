@@ -3,9 +3,9 @@
     PYTHONPATH=src python examples/serve_quantized.py [--mode w4a4_bsdp]
 
 Serves a small causal LM with BATCHED, continuously-scheduled requests
-through :class:`repro.serve.engine.ServeEngine`, exercising all **three
-serving registries** — the residency discipline applied to every resident
-concern:
+through :class:`repro.serve.engine.ServeEngine`, exercising all **four
+serving registry concepts** — the residency discipline applied to every
+resident concern:
 
 * weight residency (:mod:`repro.core.residency`): every registered format
   — including ``bsdp_fused``, whose KernelPolicy routes batched layers to
@@ -19,10 +19,16 @@ concern:
   ``ffn=bsdp_fused × int4_bp_fused``, where decode attention reads the
   stored planes through ONE fused Pallas kernel (qk scores, masked
   softmax and the plane-folded av gather in a single pass);
+* paged KV residency (:mod:`repro.core.paging`): every cache format lifts
+  to a ``paged_*`` twin whose physical residency is a refcounted page
+  pool behind ``[B, pages/slot]`` block tables — the
+  ``MIXED+kv:paged_int4_bp`` row serves bit-plane pages through the same
+  engine, and with the ``prefix_cache`` scheduler requests sharing a
+  prompt prefix map the same physical pages (COW on divergence);
 * orchestration (:mod:`repro.serve.scheduler`): ``--scheduler`` selects the
-  admission/batching policy (fcfs | sjf | token_budget[:budget=N]) that
-  plans every step — chunked prefill, refill ordering and slot reuse are
-  policy, not engine code.
+  admission/batching policy (fcfs | sjf | token_budget[:budget=N] |
+  prefix_cache) that plans every step — chunked prefill, refill ordering,
+  slot reuse and prefix-cache admission are policy, not engine code.
 
 Each row reports throughput, resident weight bytes, cache bytes, p50 TTFT
 (in the engine's deterministic processed-position work units, from
@@ -46,6 +52,7 @@ MIXED = "ffn=bsdp,mixer=w8a16,default=w8a8"
 MIXED_FUSED = "ffn=bsdp_fused,mixer=w8a16,default=w8a8"
 MODES = list(residency.formats()) + [
     MIXED, MIXED + "+kv:int4_bp", MIXED_FUSED + "+kv:int4_bp_fused",
+    MIXED + "+kv:paged_int4_bp",
 ]
 
 

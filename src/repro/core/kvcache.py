@@ -146,6 +146,23 @@ class CacheFormat:
         raise NotImplementedError
 
     # -- derived (generic) ----------------------------------------------
+    def slot_capacity(self, cache_len: int) -> int:
+        """Ring length actually allocated for a requested ``cache_len`` —
+        identity for contiguous formats; paged formats round up to a whole
+        number of pages so storage and ``pos_ids`` stay congruent."""
+        return cache_len
+
+    def flat_cache_axes(self, prefix: str, lead_axes: tuple) -> dict:
+        """Flat-cache key → FULL logical axes (leading dims included) for
+        one channel — what :func:`repro.sharding.partitioning.
+        cache_axes_table` consumes.  Contiguous formats prepend the
+        canonical ``(batch, kv_seq)``; layouts with different leading dims
+        (the paged pool) override."""
+        data_key, scale_key = CHANNEL_KEYS[prefix]
+        keys = {"": data_key, "_scale": scale_key}
+        return {keys[sfx]: ("batch", "kv_seq") + tuple(ax)
+                for sfx, ax in self.data_axes(lead_axes).items()}
+
     def resident_bytes(self, store: dict) -> int:
         """HBM bytes of one channel — real and abstract states account
         identically by construction."""
@@ -526,3 +543,9 @@ register_cache_format(BF16CacheFormat())
 register_cache_format(Int8CacheFormat())
 register_cache_format(BitPlaneCacheFormat())
 register_cache_format(FusedBitPlaneCacheFormat())
+
+# The paged generation registers its adapters (paged_bf16 … paged_int4_bp_
+# fused) on import; importing here keeps "ask the registry" a complete
+# answer for every consumer.  The bottom-of-module position makes the
+# paging→kvcache back-import see a fully initialized module.
+from repro.core import paging as _paging  # noqa: E402,F401

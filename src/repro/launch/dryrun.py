@@ -377,11 +377,53 @@ def analytic_serving(
     )
 
 
+def _channel_bytes(fmt, eff_len: int, lead, feat, dtype=None) -> int:
+    """One cache channel's bytes over ``eff_len`` resident positions,
+    occupancy-derived: ``resident_bytes(abstract_state(1, eff_len, ...))``.
+    Equal to ``slot_bytes × eff_len`` for every contiguous format; for a
+    paged format it is the page-table occupancy — ``pages_per_slot(
+    eff_len)`` whole pages (per-page scales included) plus the int32 block
+    table — which is exactly what the engine's pool allocates per slot."""
+    kw = {} if dtype is None else {"dtype": dtype}
+    return fmt.resident_bytes(fmt.abstract_state(1, eff_len, lead, feat, **kw))
+
+
+def analytic_cache_bytes(cfg, batch: int, cache_len: int, *, tp: int = 1) -> int:
+    """Closed-form decode-cache bytes for a ``batch``-slot serving engine.
+
+    Every format channel is occupancy-derived via :func:`_channel_bytes`
+    (page tables and page-rounded rings for paged formats, plain rings
+    otherwise); the format-independent leaves — ``pos_ids`` and the MLA
+    rope ring — are counted at the same ``slot_capacity``-rounded length.
+    Byte-exact against ``ServeEngine.resident_bytes()["cache"]`` for
+    attention-family configs (tested in ``tests/test_paging.py``) with no
+    ``eval_shape``."""
+    fmt = kvcache.format_for(cfg)
+    ring = fmt.slot_capacity(cache_len)
+    total = 0
+    for i in range(cfg.n_layers):
+        if cfg.mixer_kind(i) not in ("attn", "attn_cross"):
+            raise NotImplementedError(
+                f"analytic_cache_bytes covers attention layers only; layer "
+                f"{i} is {cfg.mixer_kind(i)!r}")
+        if cfg.attn_type == "mla":
+            total += _channel_bytes(fmt, cache_len, (), cfg.kv_lora_rank,
+                                    cfg.dtype) * batch
+            total += batch * ring * cfg.qk_rope_dim * 2  # bf16 rope ring
+        else:
+            _, kvp, _ = attn_dims(cfg, tp)
+            total += _channel_bytes(fmt, cache_len, (kvp,), cfg.d_head,
+                                    cfg.dtype) * 2 * batch
+        total += batch * ring * 4  # pos_ids, int32
+    return total
+
+
 def _cache_bytes_local(cfg, cell, tp, mesh_axes) -> float:
     """Per-device decode-cache bytes, derived from the cache-format
-    registry: each channel's per-slot bytes come from the format's
-    ``abstract_state`` (via ``slot_bytes``) — the cache analogue of
-    :func:`residency_qbytes`, drift-killed by construction."""
+    registry: each channel comes from the format's ``abstract_state``
+    occupancy (:func:`_channel_bytes`) — the cache analogue of
+    :func:`residency_qbytes`, drift-killed by construction.  Paged formats
+    therefore charge whole pages plus block-table bytes."""
     dways = mesh_axes.get("pod", 1) * mesh_axes.get("data", 1)
     s = cell.seq_len
     b = cell.global_batch
@@ -391,16 +433,15 @@ def _cache_bytes_local(cfg, cell, tp, mesh_axes) -> float:
         kind = cfg.mixer_kind(i)
         if kind in ("attn", "attn_cross"):
             if cfg.attn_type == "mla":
-                per_layer += s * (
-                    fmt.slot_bytes((), cfg.kv_lora_rank)
-                    + cfg.qk_rope_dim * 2  # rope key stays bf16
+                per_layer += (
+                    _channel_bytes(fmt, s, (), cfg.kv_lora_rank)
+                    + s * cfg.qk_rope_dim * 2  # rope key stays bf16
                 )
             else:
                 _, kvp, shard_kv = attn_dims(cfg, tp)
-                width = fmt.slot_bytes((kvp,), cfg.d_head) * 2  # k+v
-                per_layer += min(s, cfg.sliding_window or s) * (
-                    width / (tp if shard_kv else 1)
-                )
+                eff = min(s, cfg.sliding_window or s)
+                width = _channel_bytes(fmt, eff, (kvp,), cfg.d_head) * 2
+                per_layer += width / (tp if shard_kv else 1)
         elif kind == "mamba":
             per_layer += cfg.d_inner * cfg.d_state * 4 / tp
     return b * per_layer / min(b if b else 1, dways) if b else per_layer
@@ -680,25 +721,45 @@ def analyze_cell(
 # ---------------------------------------------------------------------------
 
 
+def _registry_arg(parse):
+    """argparse ``type=`` wrapper: registry ValueErrors (which list the
+    registered names) survive as ArgumentTypeError instead of argparse's
+    generic "invalid value" — typos fail at parse time with the list."""
+
+    def convert(text):
+        try:
+            return parse(text)
+        except (ValueError, KeyError, TypeError) as e:
+            raise argparse.ArgumentTypeError(str(e) or repr(e)) from e
+
+    return convert
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
     ap.add_argument("--qmode", default="bf16",
+                    type=_registry_arg(
+                        lambda s: residency.ResidencySpec.parse(s).describe()),
                     help="registered residency format name (one of "
                          f"{', '.join(residency.formats())}) or a per-layer "
                          "policy like 'ffn=bsdp,default=w8a8'")
     ap.add_argument("--cache-format", default=None,
-                    choices=list(kvcache.formats()),
-                    help="decode-cache residency format (registered in "
-                         "repro.core.kvcache.FORMATS); decode-cell cache "
-                         "inputs and analytic cache bytes both derive from "
-                         "its abstract_state (int4_bp_fused shares "
-                         "int4_bp's layout — fusion is kernel policy, so "
-                         "its dry-run accounting is identical by "
-                         "construction)")
+                    type=_registry_arg(
+                        lambda s: kvcache.get_cache_format(s).name),
+                    help="decode-cache residency format (one of "
+                         f"{', '.join(kvcache.formats())}); decode-cell "
+                         "cache inputs and analytic cache bytes both derive "
+                         "from its abstract_state (int4_bp_fused shares "
+                         "int4_bp's layout — fusion is kernel policy — and "
+                         "paged_* formats charge whole pages plus block "
+                         "tables, so dry-run accounting matches the pool "
+                         "by construction)")
     ap.add_argument("--scheduler", default=None,
+                    type=_registry_arg(
+                        lambda s: (sched_lib.make_scheduler(s), s)[1]),
                     help="restrict the decode-cell analytic serving model "
                          "to one registered scheduler (one of "
                          f"{', '.join(sched_lib.schedulers())}; default: "
@@ -714,11 +775,8 @@ def main():
                     help="lower+compile only (multi-pod pass/fail runs)")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
-    # validate + canonicalize the residency policy early (typos fail here,
-    # not per-cell); the canonical string threads through to record tags
-    args.qmode = residency.ResidencySpec.parse(args.qmode).describe()
-    if args.scheduler:
-        sched_lib.make_scheduler(args.scheduler)  # typos fail here, not per-cell
+    # --qmode/--cache-format/--scheduler were validated + canonicalized at
+    # parse time by _registry_arg (typos fail with the registered list)
 
     from repro.configs import ARCH_NAMES
 

@@ -4,16 +4,17 @@ Initializes (or restores) a model, converts weights to the requested
 residency policy — the paper's one-time GEMV-V layout transform — and
 serves synthetic batched requests through the continuous-batching engine,
 reporting throughput and SLO metrics (TTFT/TPOT percentiles from
-``ServeEngine.stats()``).  The three serving registries each get a flag:
+``ServeEngine.stats()``).  The serving registry concepts each get a flag:
 ``--mode`` takes a registered *weight-residency* format name (including
 ``bsdp_fused`` — the single-contraction bit-plane GEMM kernel) or a
 per-layer ResidencySpec string; ``--cache-format`` selects the
 *decode-cache* residency (``repro.core.kvcache.FORMATS``: bf16 | int8 |
-int4_bp | int4_bp_fused, the last serving decode attention through the
-fused Pallas plane kernel); ``--scheduler`` selects the *orchestration*
-policy
-(``repro.serve.scheduler.SCHEDULERS``: fcfs | sjf | token_budget, with
-CLI kwargs like ``token_budget:budget=16``):
+int4_bp | int4_bp_fused, plus their ``paged_*`` liftings whose physical
+residency is a refcounted page pool); ``--scheduler`` selects the
+*orchestration* policy (``repro.serve.scheduler.SCHEDULERS``: fcfs |
+sjf | token_budget | prefix_cache, with CLI kwargs like
+``token_budget:budget=16``).  An unknown name on any of the three flags
+fails fast with the registered list:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --mode w8a8 --requests 8
@@ -39,22 +40,40 @@ from repro.serve import scheduler as sched_lib
 from repro.sharding import partitioning as P
 
 
+def registry_arg(parse):
+    """Wrap a registry parser for argparse ``type=``: argparse reports only
+    a generic "invalid value" for ValueError, so re-raise as
+    ArgumentTypeError to surface the registry's own message (which lists
+    the registered names)."""
+
+    def convert(text):
+        try:
+            return parse(text)
+        except (ValueError, KeyError, TypeError) as e:
+            raise argparse.ArgumentTypeError(str(e) or repr(e)) from e
+
+    return convert
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mode", default="w8a8", type=residency.ResidencySpec.parse,
+    ap.add_argument("--mode", default="w8a8",
+                    type=registry_arg(residency.ResidencySpec.parse),
                     help="registered format name (one of "
                          f"{', '.join(residency.formats())}) or a per-layer "
                          "policy like 'ffn=bsdp,default=w8a8'")
     ap.add_argument("--cache-format", default=None,
-                    choices=list(kvcache.formats()),
-                    help="decode-cache residency format (default: the "
+                    type=registry_arg(
+                        lambda s: kvcache.get_cache_format(s).name),
+                    help="decode-cache residency format (one of "
+                         f"{', '.join(kvcache.formats())}; default: the "
                          "arch config's; int4_bp = §IV bit-plane K/V, "
-                         "int4_bp_fused = same planes read through the "
-                         "fused Pallas decode-attention kernel)")
+                         "int4_bp_fused = the fused Pallas decode kernel, "
+                         "paged_* = page-pool block tables)")
     ap.add_argument("--scheduler", default="fcfs",
-                    type=sched_lib.make_scheduler,
+                    type=registry_arg(sched_lib.make_scheduler),
                     help="orchestration policy (one of "
                          f"{', '.join(sched_lib.schedulers())}), with "
                          "optional kwargs like 'token_budget:budget=16'")

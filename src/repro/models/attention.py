@@ -192,11 +192,17 @@ def init_kv_cache(cfg, batch: int, cache_len: int, *, tp: int = 1, dtype=None):
 
     K and V are two format channels with lead dims ``(kv_heads,)`` and
     feature ``d_head``; ``pos_ids`` (absolute position per slot, -1 = empty)
-    is format-independent.
+    is format-independent.  The ring length is the format's
+    ``slot_capacity(cache_len)`` — identity for contiguous formats, rounded
+    up to a whole number of pages for paged ones, so the block-table gather
+    and ``pos_ids`` always cover the same slots (paged appends/reads then
+    indirect through the ``[B, pages_per_slot]`` table instead of a ring
+    offset, inside the format).
     """
     _, kvp, _ = attn_dims(cfg, tp)
     dtype = dtype or cfg.dtype
     fmt = kvcache.format_for(cfg)
+    cache_len = fmt.slot_capacity(cache_len)
     cache = {}
     for prefix in ("k", "v"):
         store = fmt.init(batch, cache_len, (kvp,), cfg.d_head, dtype=dtype)
@@ -455,6 +461,7 @@ def init_mla_cache(cfg, batch, cache_len, dtype=None):
     (phase precision), exactly as the int8 path always did."""
     dtype = dtype or cfg.dtype
     fmt = kvcache.format_for(cfg)
+    cache_len = fmt.slot_capacity(cache_len)
     cache = dict(fmt.channel_entries(
         "c_kv", fmt.init(batch, cache_len, (), cfg.kv_lora_rank, dtype=dtype)
     ))

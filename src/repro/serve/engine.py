@@ -7,21 +7,29 @@ every request runs prefill + N decode steps against them.  Per the paper's
 convert time; the per-request activation quantization is fused in the
 kernels.
 
-Residency is governed by **three registries**, one per resident concern:
+Residency is governed by **four registry concepts**, one per resident
+concern:
 
 * ``mode``          — *weight* residency (:mod:`repro.core.residency`):
                       which layout each parameter tree leaf serves from.
 * ``cache_format``  — *decode-cache* residency (:mod:`repro.core.kvcache`):
                       how K/V (and the MLA latent) slots are stored/read.
+* *pages*           — *physical cache placement* (:mod:`repro.core.paging`):
+                      a ``paged_*`` cache format breaks the slot→storage
+                      identity; a refcounted :class:`~repro.core.paging.
+                      PagePool` plus a radix prefix index decide which
+                      physical pages back each slot's block table (prefix
+                      sharing, COW, eviction).
 * ``scheduler``     — *host-side orchestration*
                       (:mod:`repro.serve.scheduler`): which requests batch
                       together, when refills run, how prefill work is
                       chunked against decode latency.
 
-so e.g. ``ServeEngine(mode={"ffn": "bsdp"}, cache_format="int4_bp",
-scheduler="token_budget")`` serves both dominant resident payloads
-bit-plane-resident while chunking long prompts so queued requests' TTFT
-never stalls behind a monolithic prefill.
+so e.g. ``ServeEngine(mode={"ffn": "bsdp"}, cache_format="paged_int4_bp",
+scheduler="prefix_cache")`` serves both dominant resident payloads
+bit-plane-resident while shared prompt prefixes occupy one physical copy
+and long prompts chunk so queued requests' TTFT never stalls behind a
+monolithic prefill.
 
 ``ServeEngine`` implements continuous batched decode: requests of different
 lengths share one ring-cache batch; finished (or cancelled) slots are
@@ -45,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import kvcache, qlinear, residency
+from repro.core import kvcache, paging, qlinear, residency
 from repro.models import model as model_lib
 from repro.serve import scheduler as sched_lib
 from repro.serve.scheduler import (
@@ -210,7 +218,13 @@ class ServeEngine:
     residency compose freely — e.g. ``mode="bsdp_fused"`` (one
     single-contraction MXU call per dense tile) × ``cache_format=
     "int4_bp_fused"`` serves both dominant payloads through the fused
-    bit-plane kernels.
+    bit-plane kernels.  The ``paged_*`` adapters additionally break the
+    slot→storage identity: slots hold block tables into a shared
+    :class:`~repro.core.paging.PagePool` (``page_pool_pages`` caps the
+    physical pool; default reserves ``slots × pages_per_slot``), and a
+    scheduler declaring ``wants_prefix_cache`` (``"prefix_cache"``) maps
+    shared tokenized prompt prefixes onto the same physical pages
+    (refcounted, COW on the first divergent append).
 
     ``scheduler`` selects the orchestration policy — anything
     :func:`repro.serve.scheduler.make_scheduler` accepts (a registered name
@@ -234,6 +248,7 @@ class ServeEngine:
         scheduler: sched_lib.SchedulerLike = "fcfs",
         min_dim: int = 64,
         trace_logits: bool = False,
+        page_pool_pages: Optional[int] = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
         spec = residency.ResidencySpec.parse(mode)
@@ -245,7 +260,8 @@ class ServeEngine:
         self.slots, self.max_len, self.rules, self.impl = slots, max_len, rules, impl
         self.spec = spec
         self.mode = spec.describe()
-        self.cache_format = kvcache.format_for(cfg).name
+        self._fmt = kvcache.format_for(cfg)
+        self.cache_format = self._fmt.name
         self.scheduler = sched_lib.make_scheduler(scheduler)
         self.trace_logits = trace_logits
         #: when ``trace_logits``: [(kind, slots, np.ndarray logits)] in
@@ -265,6 +281,33 @@ class ServeEngine:
         self._pad_ok = all(
             cfg.mixer_kind(i) in ("attn", "attn_cross", "cross")
             for i in range(cfg.n_layers)
+        )
+        # -- paged residency: pool + block tables + radix prefix index ----
+        self._paged = isinstance(self._fmt, paging.PagedCacheFormat)
+        self.page_pool: Optional[paging.PagePool] = None
+        self.prefix_index: Optional[paging.RadixPrefixIndex] = None
+        if self._paged:
+            self._page = self._fmt.page_size
+            self._npp = self._fmt.pages_per_slot(max_len)
+            self._ring_len = self._fmt.slot_capacity(max_len)
+            pool_pages = (slots * self._npp if page_pool_pages is None
+                          else int(page_pool_pages))
+            self.page_pool = paging.PagePool(pool_pages, self._page)
+            self.prefix_index = paging.RadixPrefixIndex(self._page)
+            # host mirrors of the device block tables, one row per slot
+            self._tables = np.zeros((slots, self._npp), np.int64)
+            self._table_valid = np.zeros(slots, bool)
+            # True ⇒ the page is also held by the prefix index / another
+            # slot: any write into it must copy first (COW)
+            self._shared_mask = np.zeros((slots, self._npp), bool)
+        # prefix sharing remaps pool rows only; it needs every per-position
+        # leaf paged, which holds for pure GQA self-attention (MLA carries
+        # an unpaged float k_rope; cross/SSM carry per-slot state)
+        self._prefix_sharing = (
+            self._paged and self._pad_ok
+            and bool(getattr(self.scheduler, "wants_prefix_cache", False))
+            and all(cfg.mixer_kind(i) == "attn" for i in range(cfg.n_layers))
+            and not getattr(cfg, "kv_lora_rank", 0)
         )
         self._clock = clock
         self._next_uid = 0
@@ -326,6 +369,7 @@ class ServeEngine:
             slots=self.slots, active=tuple(self.active),
             queue=tuple(self.queue), chunking_ok=self._pad_ok,
             max_len=self.max_len, step_index=self.step_index,
+            pages=None if self.page_pool is None else self.page_pool.stats(),
         )
 
     @staticmethod
@@ -349,6 +393,12 @@ class ServeEngine:
         req.finished = self._stamp()
         if slot is not None:
             self.active[slot] = None
+            if self._paged and self._table_valid[slot]:
+                # drop this slot's references; pages pinned by the prefix
+                # index (or another slot's table) stay resident
+                self.page_pool.release(self._tables[slot])
+                self._table_valid[slot] = False
+                self._shared_mask[slot] = False
         self.scheduler.on_complete(req, self._view())
 
     def _sweep_terminal(self) -> None:
@@ -365,6 +415,127 @@ class ServeEngine:
                 # mid-decode cancel/stop: the slot frees NOW; its ring-cache
                 # row is overwritten wholesale by the next refill splice
                 self._finish(req, slot, req.state)
+
+    # -- paged residency ------------------------------------------------
+    def _alloc_pages(self, n: int) -> np.ndarray:
+        """Allocate ``n`` physical pages, evicting least-recently-matched
+        prefix-index leaves until the pool can satisfy the request."""
+        while True:
+            try:
+                return self.page_pool.alloc(n)
+            except paging.PoolExhausted:
+                page = self.prefix_index.evict_lru(
+                    lambda p: self.page_pool.refs[p] == 1)
+                if page is None:
+                    raise
+                self.page_pool.release([page])
+                self.page_pool.evictions += 1
+
+    def _try_attach_prefix(self, slot: int, req: Request) -> bool:
+        """Map the request's leading block-table entries onto the physical
+        pages of the longest registered prompt prefix (refcounted).  The
+        request enters PREFILLING with ``prefilled = matched_tokens`` so a
+        chunk-planning scheduler advances only the unshared suffix; at
+        least one suffix token is always left so the chunk path produces
+        the first-token logits."""
+        if not self._prefix_sharing or self.caches is None:
+            return False
+        matched = self.prefix_index.match(req.prompt)
+        k = min(len(matched), (req.prompt_len - 1) // self._page,
+                self._npp - 1)
+        if k <= 0:
+            return False
+        shared = matched[:k]
+        self.page_pool.retain(shared)
+        try:
+            private = self._alloc_pages(self._npp - k)
+        except paging.PoolExhausted:
+            self.page_pool.release(shared)
+            raise
+        self._tables[slot, :k] = shared
+        self._tables[slot, k:] = private
+        self._table_valid[slot] = True
+        self._shared_mask[slot] = False
+        self._shared_mask[slot, :k] = True
+        table_row = jnp.asarray(self._tables[slot], jnp.int32)
+        pos_row = np.full(self._ring_len, -1, np.int32)
+        pos_row[: k * self._page] = np.arange(k * self._page, dtype=np.int32)
+        pos_row = jnp.asarray(pos_row)
+
+        def attach(name, leaf, axis):
+            if name in paging.TABLE_KEYS:
+                return (leaf.at[slot].set(table_row) if axis == 0
+                        else leaf.at[:, slot].set(table_row))
+            if name == "pos_ids":
+                return (leaf.at[slot].set(pos_row) if axis == 0
+                        else leaf.at[:, slot].set(pos_row))
+            return leaf
+
+        self.caches = _tree_batched_named(self.caches, attach)
+        n_tok = k * self._page
+        self.active[slot] = req
+        self.pos[slot] = n_tok
+        req.prefilled = n_tok
+        req.state = PREFILLING
+        self.page_pool.prefix_hits += 1
+        self.page_pool.prefix_tokens_saved += n_tok
+        return True
+
+    def _register_prefix(self, slot: int, req: Request) -> None:
+        """Register a fully-prefilled prompt's page-aligned prefix in the
+        radix index (called at the PREFILLING → DECODING transition)."""
+        if not self._prefix_sharing:
+            return
+        k = min(req.prompt_len // self._page, self._npp)
+        if k <= 0:
+            return
+        pages = self._tables[slot, :k]
+        new = self.prefix_index.insert(req.prompt[: k * self._page], pages)
+        if new:
+            self.page_pool.retain(new)
+        # any of this slot's prefix pages now multiply held (by the index
+        # or an attach donor) must COW before the ring wraps into them
+        for j in range(k):
+            if self.page_pool.refs[self._tables[slot, j]] > 1:
+                self._shared_mask[slot, j] = True
+
+    def _cow_writes(self, writes) -> None:
+        """Copy-on-write: before this step's appends, give every shared
+        page about to be written a private copy.  ``writes`` rows are
+        ``(slot, positions)``; under ring recycling the first divergent
+        append IS the wrap write into a shared page."""
+        if not self._paged or not self._shared_mask.any():
+            return
+        ops = []
+        for slot, positions in writes:
+            for p in positions:
+                j = (int(p) % self._ring_len) // self._page
+                if not self._shared_mask[slot, j]:
+                    continue
+                old = int(self._tables[slot, j])
+                new = int(self._alloc_pages(1)[0])
+                ops.append((slot, j, old, new))
+                self._tables[slot, j] = new
+                self._shared_mask[slot, j] = False
+                self.page_pool.release([old])
+                self.page_pool.cow_copies += 1
+        if not ops:
+            return
+        slots_a = jnp.asarray([o[0] for o in ops], jnp.int32)
+        js_a = jnp.asarray([o[1] for o in ops], jnp.int32)
+        old_a = jnp.asarray([o[2] for o in ops], jnp.int32)
+        new_a = jnp.asarray([o[3] for o in ops], jnp.int32)
+
+        def cow(name, leaf, axis):
+            if name in paging.POOL_KEYS:
+                return (leaf.at[new_a].set(leaf[old_a]) if axis == 0
+                        else leaf.at[:, new_a].set(leaf[:, old_a]))
+            if name in paging.TABLE_KEYS:
+                return (leaf.at[slots_a, js_a].set(new_a) if axis == 0
+                        else leaf.at[:, slots_a, js_a].set(new_a))
+            return leaf
+
+        self.caches = _tree_batched_named(self.caches, cow)
 
     # -- execution ------------------------------------------------------
     def _prefill_slots(self, assignments: list[tuple[int, Request, int]]):
@@ -400,23 +571,52 @@ class ServeEngine:
         self.work += toks.size
         if self.caches is None:
             # first refill: allocate zeros at the full slot-batch shape
-            # directly (no slots× temporary from a concatenate broadcast)
-            self.caches = _tree_batched(
-                cache_b, lambda a, axis: jnp.zeros(
-                    a.shape[:axis] + (self.slots,) + a.shape[axis + 1:],
-                    a.dtype,
-                ),
-            )
+            # directly (no slots× temporary from a concatenate broadcast).
+            # Paged pool leaves size by the PHYSICAL pool, not slots×npp —
+            # the two differ when page_pool_pages caps residency below the
+            # naive per-slot reservation (the prefix-sharing capacity win).
+            pool_n = self.page_pool.num_pages if self._paged else 0
+
+            def zeros(name, a, axis):
+                n = pool_n if name in paging.POOL_KEYS and self._paged \
+                    else self.slots
+                return jnp.zeros(
+                    a.shape[:axis] + (n,) + a.shape[axis + 1:], a.dtype)
+
+            self.caches = _tree_batched_named(cache_b, zeros)
         # one scatter per leaf splices ALL refilled rows at once (row i of
         # the prefill batch → slot assignments[i][0]) — no per-slot copy
         slot_ids = jnp.array([slot for slot, _, _ in assignments], jnp.int32)
-        self.caches = _tree_batched_pair(
-            self.caches, cache_b,
-            lambda full, rows, axis: (
-                full.at[slot_ids].set(rows) if axis == 0
-                else full.at[:, slot_ids].set(rows)
-            ),
-        )
+        if self._paged:
+            # each refilled slot's physical pages were reserved by
+            # ``_execute``; the prefill batch wrote its rows through
+            # IDENTITY tables, so batch row i's pages are pool rows
+            # [i·npp, (i+1)·npp) in order and the flat page-id scatter
+            # below lands them on the reserved pages
+            new_tables = np.stack(
+                [self._tables[slot] for slot, _, _ in assignments])
+            page_ids = jnp.asarray(new_tables.reshape(-1), jnp.int32)
+            table_rows = jnp.asarray(new_tables, jnp.int32)
+
+            def splice(name, full, rows, axis):
+                if name in paging.POOL_KEYS:
+                    return (full.at[page_ids].set(rows) if axis == 0
+                            else full.at[:, page_ids].set(rows))
+                if name in paging.TABLE_KEYS:
+                    rows = table_rows
+                return (full.at[slot_ids].set(rows) if axis == 0
+                        else full.at[:, slot_ids].set(rows))
+
+            self.caches = _tree_batched_pair_named(
+                self.caches, cache_b, splice)
+        else:
+            self.caches = _tree_batched_pair(
+                self.caches, cache_b,
+                lambda full, rows, axis: (
+                    full.at[slot_ids].set(rows) if axis == 0
+                    else full.at[:, slot_ids].set(rows)
+                ),
+            )
         last_logits = np.asarray(logits[:, -1])
         for i, (slot, req, n) in enumerate(assignments):
             self.active[slot] = req
@@ -424,6 +624,7 @@ class ServeEngine:
             req.prefilled = n
             if n == len(req.prompt):
                 req.state = DECODING
+                self._register_prefix(slot, req)
                 if self.trace_logits:
                     self.logit_trace.append(("prefill", (slot,), last_logits[i]))
                 self._emit(req, last_logits[i])
@@ -464,6 +665,7 @@ class ServeEngine:
             self.pos[slot] = req.prefilled
             if req.prefilled >= len(req.prompt):
                 req.state = DECODING  # last chunk: its logits ARE the TTFT
+                self._register_prefix(slot, req)
                 if self.trace_logits:
                     self.logit_trace.append(("prefill", (slot,), step_logits[slot]))
                 self._emit(req, step_logits[slot])
@@ -481,12 +683,29 @@ class ServeEngine:
     def _execute(self, plan: StepPlan) -> bool:
         """Run one validated :class:`StepPlan`; returns progress."""
         refills = []
+        attached = 0
+        starved = False
         for slot, req, n in plan.refills:
             if self.active[slot] is not None:
                 raise ValueError(f"plan refills occupied slot {slot}")
             if req not in self.queue:
                 raise ValueError(f"plan refills unqueued request {req.uid}")
             self.queue.remove(req)
+            try:
+                if self._try_attach_prefix(slot, req):
+                    attached += 1  # prefix mapped; chunks do the suffix
+                    continue
+                if self._paged:
+                    # reserve physical pages up front; under pool pressure
+                    # the request waits (live slots free pages as they
+                    # finish, and a registered prefix may let it attach)
+                    self._tables[slot] = self._alloc_pages(self._npp)
+                    self._table_valid[slot] = True
+                    self._shared_mask[slot] = False
+            except paging.PoolExhausted:
+                self.queue.insert(0, req)
+                starved = True
+                break
             refills.append((slot, req, min(n, len(req.prompt))))
         if refills:
             if self._pad_ok:
@@ -506,8 +725,22 @@ class ServeEngine:
             if self.active[s] is not None and self.active[s].state == DECODING
         )
         if chunks or decode_slots:
+            if self._paged:
+                self._cow_writes(
+                    [(slot, range(self.active[slot].prefilled,
+                                  self.active[slot].prefilled + n))
+                     for slot, n in chunks]
+                    + [(s, (self.pos[s],)) for s in decode_slots])
             self._chunk_decode(chunks, decode_slots)
-        return bool(refills or chunks or decode_slots)
+        progress = bool(refills or attached or chunks or decode_slots)
+        if starved and not progress:
+            # nothing live to ever free a page: the pool cannot hold even
+            # one request — a sizing error, not a transient
+            raise paging.PoolExhausted(
+                f"page pool ({self.page_pool.num_pages} pages) cannot hold "
+                f"one request ({self._npp} pages/slot) and no live slot "
+                "will free any")
+        return progress
 
     def step(self) -> bool:
         """One scheduler-planned step; False when no progress was possible
@@ -538,6 +771,7 @@ class ServeEngine:
             wall_s=self.wall_s,
             work=self.work,
             steps=self.step_index,
+            pages=None if self.page_pool is None else self.page_pool.stats(),
         )
 
     def resident_bytes(self) -> dict:
@@ -569,4 +803,38 @@ def _tree_batched_pair(full, part, fn):
             lambda f, o: fn(f, o, 0), full["prefix"], part["prefix"]),
         "stack": jax.tree_util.tree_map(
             lambda f, o: fn(f, o, 1), full["stack"], part["stack"]),
+    }
+
+
+def _leaf_name(path) -> Optional[str]:
+    """Last string dict key on a tree path — the cache leaf's flat name
+    (``"k"``, ``"k_pages"``, ``"pos_ids"``, …), which is what decides
+    whether a leaf lives in the page pool, a block table, or a slot row."""
+    name = None
+    for p in path:
+        key = getattr(p, "key", None)
+        if isinstance(key, str):
+            name = key
+    return name
+
+
+def _tree_batched_named(caches, fn):
+    """Name-aware :func:`_tree_batched`: ``fn(leaf_name, leaf, axis)``."""
+    return {
+        "prefix": jax.tree_util.tree_map_with_path(
+            lambda path, a: fn(_leaf_name(path), a, 0), caches["prefix"]),
+        "stack": jax.tree_util.tree_map_with_path(
+            lambda path, a: fn(_leaf_name(path), a, 1), caches["stack"]),
+    }
+
+
+def _tree_batched_pair_named(full, part, fn):
+    """Name-aware :func:`_tree_batched_pair`."""
+    return {
+        "prefix": jax.tree_util.tree_map_with_path(
+            lambda path, f, o: fn(_leaf_name(path), f, o, 0),
+            full["prefix"], part["prefix"]),
+        "stack": jax.tree_util.tree_map_with_path(
+            lambda path, f, o: fn(_leaf_name(path), f, o, 1),
+            full["stack"], part["stack"]),
     }

@@ -136,6 +136,10 @@ class EngineView:
     chunking_ok: bool = True
     max_len: int = 0
     step_index: int = 0
+    #: page-pool telemetry (``PagePool.stats()``) when the engine serves a
+    #: paged cache format; None on contiguous-ring configs.  Schedulers may
+    #: read occupancy/shared-fraction to steer admission, never mutate it.
+    pages: Optional[dict] = None
 
     def free_slots(self) -> tuple:
         return tuple(s for s in range(self.slots) if self.active[s] is None)
@@ -311,9 +315,28 @@ class TokenBudgetScheduler(FCFSScheduler):
                         decode=decode)
 
 
+class PrefixCacheScheduler(TokenBudgetScheduler):
+    """Token-budget chunking plus radix prefix-cache admission.
+
+    ``wants_prefix_cache`` opts the engine into the page-pool's radix index:
+    on refill, a request whose tokenized prompt shares a page-aligned prefix
+    with an earlier request attaches the matching physical pages (refcounted,
+    COW on first divergent append) and prefills only the un-matched suffix.
+    The attach itself is residency work, done by the engine/pool — this class
+    only declares the intent, so any chunk-planning scheduler can opt in by
+    setting the same flag.  Chunked planning is required: an attached request
+    enters PREFILLING with ``prefilled = matched_tokens`` and must advance by
+    chunks rather than a whole-prompt refill.
+    """
+
+    name = "prefix_cache"
+    wants_prefix_cache = True
+
+
 register_scheduler(FCFSScheduler)
 register_scheduler(SJFScheduler)
 register_scheduler(TokenBudgetScheduler)
+register_scheduler(PrefixCacheScheduler)
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +369,8 @@ class EngineStats:
     wall_s: float
     work: int
     steps: int
+    #: final ``PagePool.stats()`` snapshot (paged configs only)
+    pages: Optional[dict] = None
 
     @property
     def tok_per_s(self) -> float:

@@ -261,22 +261,20 @@ def cache_axes_table(cfg=None) -> dict[str, Axes]:
     weight side) deliberately subclass/instantiate the same layout classes,
     so they inherit the ``[N, 4, Kw]`` / ``[..., 4, Fw]`` data_axes
     contract unchanged — fusion is KernelPolicy data, never a new sharding.
+    Paged formats override ``flat_cache_axes``: the pool's leading page dim
+    maps to ``kv_seq`` (pages shard where sequence bytes used to live) and
+    the ``*_pages`` block tables stay batch-sharded, replicated over pages.
     ``cfg=None`` falls back to the ``bf16`` format (legacy callers).
     """
     from repro.core import kvcache
 
     fmt = (kvcache.format_for(cfg) if cfg is not None
            else kvcache.get_cache_format("bf16"))
-    base = ("batch", "kv_seq")
     table = dict(_STATIC_CACHE_AXES)
     for prefix, lead in (("k", ("kv_heads_cache",)),
                          ("v", ("kv_heads_cache",)),
                          ("c_kv", ())):
-        data_key, scale_key = kvcache.CHANNEL_KEYS[prefix]
-        axes = fmt.data_axes(lead)
-        table[data_key] = base + tuple(axes[""])
-        if "_scale" in axes:
-            table[scale_key] = base + tuple(axes["_scale"])
+        table.update(fmt.flat_cache_axes(prefix, lead))
     return table
 
 

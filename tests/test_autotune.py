@@ -100,12 +100,46 @@ class TestSweep:
             "gemm_fused|m8_n512_kw16": {
                 "kernel": "gemm_fused", "shape_class": "m8_n512_kw16",
                 "blocks": [64, 128, 16], "us": 123.0,
+                "env": autotune.env_key(),
             },
         }
         path = tmp_path / "tuned.json"
         autotune.save(winners, str(path))
         loaded = autotune.load(str(path))
         assert loaded == winners == json.loads(path.read_text())
-        assert autotune.apply_cache(loaded) == 1
+        assert autotune.apply_cache(loaded) == (1, 0)
         assert ops.bsdp_blocks_for("gemm_fused", 8, 512, 16) == (8, 128, 16)
         assert ops._BSDP_TUNED[("gemm_fused", "m8_n512_kw16")] == (64, 128, 16)
+
+    def test_stale_cache_entries_skipped(self):
+        """A cache written under a different jax version/backend (or before
+        env stamping existed) must NOT install its block shapes."""
+        good = {
+            "kernel": "gemm", "shape_class": "m8_n512_kw16",
+            "blocks": [64, 128, 16], "us": 1.0, "env": autotune.env_key(),
+        }
+        stale_env = {
+            "kernel": "gemm_fused", "shape_class": "m8_n512_kw16",
+            "blocks": [128, 256, 32], "us": 1.0, "env": "0.0.1|tpu",
+        }
+        unstamped = {
+            "kernel": "gemv", "shape_class": "m1_n512_kw16",
+            "blocks": [8, 128, 32], "us": 1.0,
+        }
+        installed, stale = autotune.apply_cache({
+            "gemm|m8_n512_kw16": good,
+            "gemm_fused|m8_n512_kw16": stale_env,
+            "gemv|m1_n512_kw16": unstamped,
+        })
+        assert (installed, stale) == (1, 2)
+        assert ("gemm", "m8_n512_kw16") in ops._BSDP_TUNED
+        assert ("gemm_fused", "m8_n512_kw16") not in ops._BSDP_TUNED
+        assert ("gemv", "m1_n512_kw16") not in ops._BSDP_TUNED
+
+    def test_sweep_entries_carry_env_stamp(self):
+        common.set_smoke(True)
+        try:
+            winners = autotune.sweep(shapes=((8, 64, 64),), kernels=("gemm",))
+        finally:
+            common.set_smoke(False)
+        assert all(e["env"] == autotune.env_key() for e in winners.values())

@@ -126,6 +126,57 @@ class TestBenchSmoke:
                 line.split("ttft_work_p95=")[1].split(";")[0])
         assert p95["token_budget"] <= p95["fcfs"]
 
+    def test_prefix_sharing_rows_present(self, smoke_output):
+        """The paged prefix-sharing ladder: the shared-prefix trace served
+        paged vs unpaged at the same cache-byte budget must show ≥2×
+        concurrent slot capacity with a non-zero shared-page fraction —
+        the page-pool subsystem's headline win."""
+        def grab(tag):
+            line = next(
+                l for l in smoke_output.splitlines()
+                if l.startswith(f"gemv_e2e/sched_prefix_{tag},"))
+            return dict(
+                kv.split("=") for kv in line.split(",", 2)[2].split(";"))
+
+        unpaged, paged = grab("unpaged"), grab("paged")
+        assert int(paged["concurrent_max"]) >= \
+            2 * int(unpaged["concurrent_max"])
+        # same byte budget: the paged pool holds the unpaged token capacity
+        # (only pos-id/block-table bookkeeping grows with the extra slots)
+        assert float(paged["kv_mb"]) <= 1.15 * float(unpaged["kv_mb"])
+        assert float(paged["shared_frac_max"]) > 0
+        assert int(paged["prefix_hits"]) >= 1
+        # the prefix_cache scheduler row joined the per-policy ladder too
+        assert "gemv_e2e/sched_prefix_cache," in smoke_output
+
+    def test_checked_in_bench_json_matches_contract(self):
+        """BENCH_smoke.json (written by ``benchmarks/run.py --smoke
+        --json``) is checked in as the row contract: every required ladder
+        row name must be present with parseable fields.  Timings are
+        container noise — names and derived keys are the contract."""
+        import json
+
+        with open(os.path.join(REPO, "BENCH_smoke.json")) as f:
+            rows = json.load(f)
+        names = {r["name"] for r in rows}
+        required = {
+            "gemv_e2e/mixed_residency",
+            "gemv_e2e/sched_fcfs", "gemv_e2e/sched_sjf",
+            "gemv_e2e/sched_token_budget", "gemv_e2e/sched_prefix_cache",
+            "gemv_e2e/sched_prefix_unpaged", "gemv_e2e/sched_prefix_paged",
+        }
+        required |= {f"gemv_e2e/kv_cache_{f}"
+                     for f in ("bf16", "int8", "int4_bp", "int4_bp_fused",
+                               "paged_bf16", "paged_int8", "paged_int4_bp",
+                               "paged_int4_bp_fused")}
+        missing = required - names
+        assert not missing, f"BENCH_smoke.json missing rows: {missing}"
+        for r in rows:
+            assert isinstance(r["us_per_call"], float)
+        paged = next(r for r in rows
+                     if r["name"] == "gemv_e2e/sched_prefix_paged")
+        assert float(paged["derived"]["shared_frac_max"]) > 0
+
     def test_rows_are_csv_shaped(self, smoke_output):
         lines = [l for l in smoke_output.splitlines() if "/" in l and "," in l]
         assert lines, "no CSV rows at all"

@@ -249,9 +249,12 @@ class TestCacheSharding:
         # spec length never exceeds payload rank (plane dims stay unsharded)
         assert len(k_spec) <= k_abs.ndim
         assert "model" in jax.tree_util.tree_leaves(tuple(k_spec))
-        if mode != "bf16":
+        if "_scale" in kvcache.get_cache_format(mode).suffixes:
             s_spec = specs["stack"]["slot0"]["k_scale"]
             assert len(s_spec) <= cache_abs["stack"]["slot0"]["k_scale"].ndim
+        if "_pages" in kvcache.get_cache_format(mode).suffixes:
+            t_spec = specs["stack"]["slot0"]["k_pages"]
+            assert len(t_spec) <= cache_abs["stack"]["slot0"]["k_pages"].ndim
 
     def test_table_tracks_format(self):
         t_bf = P.cache_axes_table(_cfg())

@@ -405,6 +405,86 @@ class TestLifecycle:
             st.percentile("ttft_work", 50)
 
 
+class TestEngineStatsEdges:
+    """Satellite: percentile helpers and TTFT accounting at the edges —
+    zero-request traces, single-request traces, and requests cancelled
+    before ever reaching a slot."""
+
+    def test_percentiles_on_zero_request_trace(self):
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        eng.run()  # nothing submitted; run() is a no-op
+        st = eng.stats()
+        assert st.requests == () and st.total_tokens == 0
+        for field in ("ttft_s", "ttft_steps", "ttft_work", "tpot_s", "e2e_s"):
+            for q in (0, 50, 95, 100):
+                assert st.percentile(field, q) is None
+        assert st.tok_per_s == 0.0
+        assert st.summary()["ttft_s_p95"] is None
+
+    def test_percentiles_on_single_request_trace(self):
+        """With one sample every percentile is that sample — p0 == p50 ==
+        p100, no interpolation artifacts."""
+        cfg, params = _setup()
+        fake = iter(np.arange(0.0, 100.0, 0.5))
+        eng = ServeEngine(params, cfg, slots=1, max_len=32,
+                          clock=lambda: float(next(fake)))
+        eng.submit(np.arange(5, dtype=np.int32), 3)
+        eng.run()
+        st = eng.stats()
+        assert len(st.requests) == 1
+        r = st.requests[0]
+        assert r.ttft_s is not None and r.tpot_s is not None
+        for field, want in (("ttft_s", r.ttft_s), ("ttft_work", r.ttft_work),
+                            ("tpot_s", r.tpot_s), ("e2e_s", r.e2e_s)):
+            for q in (0, 50, 95, 100):
+                assert st.percentile(field, q) == pytest.approx(want)
+
+    def test_queued_cancel_has_no_ttft_and_stays_out_of_aggregates(self):
+        """A request cancelled while still QUEUED records no first token:
+        its RequestStats carries None TTFT/TPOT fields and the percentile
+        aggregates are computed purely from the requests that ran."""
+        cfg, params = _setup()
+        fake = iter(np.arange(0.0, 100.0, 0.5))
+        eng = ServeEngine(params, cfg, slots=1, max_len=32,
+                          clock=lambda: float(next(fake)))
+        hog = eng.submit(np.arange(5, dtype=np.int32), 3)
+        ghost = eng.submit(np.arange(4, dtype=np.int32), 3)
+        ghost.cancel()  # never leaves the queue
+        eng.run()
+        assert hog.state == DONE and ghost.state == CANCELLED
+        st = eng.stats()
+        by_uid = {r.uid: r for r in st.requests}
+        g = by_uid[ghost.uid]
+        assert g.state == CANCELLED and g.new_tokens == 0
+        assert g.ttft_s is g.ttft_steps is g.ttft_work is None
+        assert g.tpot_s is None
+        # aggregates see exactly one sample — the request that ran
+        h = by_uid[hog.uid]
+        for q in (0, 50, 100):
+            assert st.percentile("ttft_s", q) == pytest.approx(h.ttft_s)
+            assert st.percentile("ttft_work", q) == pytest.approx(h.ttft_work)
+        assert st.total_tokens == h.new_tokens
+
+    def test_queued_cancel_e2e_clock_still_closes(self):
+        """Even without a first token, a queued-cancelled request's e2e
+        clock closes at cancellation time (finished stamp is set), so
+        e2e percentiles include it while TTFT percentiles do not."""
+        cfg, params = _setup()
+        eng = ServeEngine(params, cfg, slots=1, max_len=32)
+        a = eng.submit(np.arange(4, dtype=np.int32), 2)
+        b = eng.submit(np.arange(4, dtype=np.int32), 2)
+        b.cancel()
+        eng.run()
+        st = eng.stats()
+        by_uid = {r.uid: r for r in st.requests}
+        assert by_uid[b.uid].e2e_s is not None
+        assert by_uid[b.uid].ttft_s is None
+        ttft_vals = [r.ttft_s for r in st.requests if r.ttft_s is not None]
+        e2e_vals = [r.e2e_s for r in st.requests if r.e2e_s is not None]
+        assert len(ttft_vals) == 1 and len(e2e_vals) == 2
+
+
 # ---------------------------------------------------------------------------
 # 4. Registry + analytic serving model
 # ---------------------------------------------------------------------------
