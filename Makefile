@@ -1,9 +1,22 @@
 # Tier-1 verification (the pinned command from ROADMAP.md): the full
 # deterministic test suite, including the benchmark bit-rot smoke.
-.PHONY: verify bench-smoke
+.PHONY: verify bench-smoke trace-smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --smoke
+
+# Observability end-to-end gate: serve a traced smoke run with the fused
+# bit-plane stack (Chrome-trace sink + periodic stats lines), then validate
+# the exported JSON against the trace-event schema.
+trace-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m repro.launch.serve \
+		--arch qwen3-1.7b --smoke --min-dim 16 \
+		--mode 'ffn=bsdp_fused,mixer=w8a16,default=w8a8' \
+		--cache-format paged_int4_bp_fused --scheduler prefix_cache \
+		--requests 4 --max-new 4 --slots 2 --max-len 32 \
+		--trace /tmp/repro_trace.json --stats-every 2
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m repro.obs.validate \
+		/tmp/repro_trace.json

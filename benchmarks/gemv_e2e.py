@@ -130,6 +130,7 @@ def run() -> list[str]:
     rows.extend(_kv_cache_rows())
     rows.extend(_scheduler_rows())
     rows.extend(_prefix_sharing_rows())
+    rows.append(_trace_overhead_row())
     return rows
 
 
@@ -355,6 +356,61 @@ def _prefix_sharing_rows() -> list[str]:
         rows.append(row(f"gemv_e2e/sched_prefix_{tag}",
                         dt / max(st.total_tokens, 1), derived))
     return rows
+
+
+def _trace_overhead_row() -> str:
+    """Observability overhead guard: traced vs untraced serving throughput.
+
+    The identical workload runs twice through ``ServeEngine`` — once with
+    no sink registered (the zero-overhead disabled path) and once with a
+    ring sink retaining every span/counter — and the row reports both
+    tok/s plus the enabled/disabled ratio and the record volume.  The
+    contract (asserted by ``tests/test_bench_smoke.py``): enabled tracing
+    keeps ≥ 0.9× the disabled throughput in smoke mode.  A throwaway
+    warmup run amortizes compilation, and the disabled leg runs FIRST so
+    any residual warm-process advantage accrues to the traced leg — the
+    assert then bounds instrumentation cost, not compile noise.
+    """
+    import time
+
+    import repro.obs as obs
+    from repro.configs import get_smoke_config
+    from repro.models import model as model_lib
+    from repro.serve import engine
+    from repro.sharding import partitioning as P
+
+    n_req, max_new = (3, 4) if common.SMOKE else (8, 8)
+    cfg = get_smoke_config("qwen3-1.7b").scaled(n_layers=2, vocab_size=128)
+    params = P.materialize(model_lib.specs(cfg, 1), jax.random.PRNGKey(0))
+    rng0 = np.random.default_rng(0)
+    prompts = [rng0.integers(0, 128, size=(int(n),)).astype(np.int32)
+               for n in rng0.integers(4, 10, size=n_req)]
+
+    def serve(trace: bool):
+        eng = engine.ServeEngine(
+            params, cfg, slots=2, max_len=32, mode="bsdp_fused",
+            cache_format="int4_bp_fused", min_dim=16, trace=trace,
+        )
+        reqs = [eng.submit(p, max_new) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in reqs)
+        records = len(eng.timeline()) if trace else 0
+        if trace:
+            obs.unregister_sink(eng._ring)
+        return toks / dt, records
+
+    serve(False)                       # warmup: compile both jit programs
+    tok_s_off, _ = serve(False)        # disabled leg first (see docstring)
+    tok_s_on, n_records = serve(True)
+    ratio = tok_s_on / tok_s_off
+    return row(
+        "gemv_e2e/trace_overhead", 1.0 / max(tok_s_on, 1e-9),
+        f"tokens_per_s_enabled={tok_s_on:.1f};"
+        f"tokens_per_s_disabled={tok_s_off:.1f};"
+        f"ratio={ratio:.3f};records={n_records}",
+    )
 
 
 if __name__ == "__main__":

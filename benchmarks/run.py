@@ -18,19 +18,49 @@ One:     ``PYTHONPATH=src python -m benchmarks.run --only bsdp``
 CI:      ``PYTHONPATH=src python -m benchmarks.run --smoke``  (1 iteration,
          small shapes, interpret-mode kernels — asserted by
          ``tests/test_bench_smoke.py`` so benchmark bit-rot is tier-1)
-JSON:    ``--json BENCH_smoke.json`` additionally writes the rows as a
-         machine-readable artifact; the checked-in ``BENCH_smoke.json``
-         records which ladder rows the smoke harness produces (timings are
-         container noise — only the row NAMES and derived keys are
-         contract, asserted by ``tests/test_bench_smoke.py``).
+JSON:    ``--json BENCH_smoke.json`` additionally writes
+         ``{"provenance": {...}, "rows": [...]}``; the provenance block
+         (git SHA, jax version, backend, hostname, UTC timestamp) makes
+         each artifact attributable on the perf trajectory, while the
+         checked-in ``BENCH_smoke.json`` records which ladder rows the
+         smoke harness produces (timings and provenance are container
+         noise — only the row NAMES and derived keys are contract,
+         asserted by ``tests/test_bench_smoke.py``).
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import socket
+import subprocess
 import sys
 import traceback
+
+
+def provenance() -> dict:
+    """Attribution block stamped into every ``--json`` artifact.
+
+    Best-effort by design: a missing git binary or a non-repo checkout
+    yields ``"unknown"`` rather than failing the benchmark run.
+    """
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    import jax
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "hostname": socket.gethostname(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+    }
 
 
 def _parse_row(line: str) -> dict:
@@ -48,8 +78,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="1 iteration, reduced shapes (CI bit-rot check)")
     ap.add_argument("--json", default=None,
-                    help="also write rows to this path as a JSON list of "
-                         "{name, us_per_call, derived{...}} records")
+                    help="also write {provenance, rows} to this path; rows "
+                         "are {name, us_per_call, derived{...}} records")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -90,8 +120,10 @@ def main() -> None:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     if args.json:
+        doc = {"provenance": provenance(),
+               "rows": [_parse_row(r) for r in rows]}
         with open(args.json, "w") as f:
-            json.dump([_parse_row(r) for r in rows], f, indent=2)
+            json.dump(doc, f, indent=2)
             f.write("\n")
     if failed:
         raise SystemExit(f"benchmark suites failed: {failed}")

@@ -28,7 +28,12 @@ resident concern:
 * orchestration (:mod:`repro.serve.scheduler`): ``--scheduler`` selects the
   admission/batching policy (fcfs | sjf | token_budget[:budget=N] |
   prefix_cache) that plans every step — chunked prefill, refill ordering,
-  slot reuse and prefix-cache admission are policy, not engine code.
+  slot reuse and prefix-cache admission are policy, not engine code;
+* observability (:mod:`repro.obs`, the fifth registry concept): the final
+  all-fused row re-runs with ``trace=True`` and prints a timeline excerpt
+  (the step loop decomposed into plan/prefill/decode spans) plus the
+  per-kernel dispatch table counted at trace time — the 16→1 fused-kernel
+  dispatch collapse as a measured serving artifact.
 
 Each row reports throughput, resident weight bytes, cache bytes, p50 TTFT
 (in the engine's deterministic processed-position work units, from
@@ -108,7 +113,37 @@ def main():
         print(f"{label:<57} {toks/dt:8.1f} {mb:12.2f} {cache_mb:9.3f} "
               f"{st.percentile('ttft_work', 50):9.1f} {agree:8.2f}")
     print(f"scheduler: {eng.scheduler.describe()}")
+    _traced_excerpt(params, cfg, prompts, args)
     print("serve_quantized OK")
+
+
+def _traced_excerpt(params, cfg, prompts, args):
+    """Serve the all-fused pairing once more with tracing on and print what
+    the observability registry saw: a span summary of the step loop and the
+    per-kernel dispatch table."""
+    import repro.obs as obs
+
+    eng = engine.ServeEngine(
+        params, cfg, slots=3, max_len=64, mode=MIXED_FUSED,
+        cache_format="int4_bp_fused", scheduler=args.scheduler,
+        min_dim=16, trace=True,
+    )
+    for p in prompts:
+        eng.submit(p, args.max_new)
+    eng.run()
+    timeline = eng.timeline()
+    obs.unregister_sink(eng._ring)
+
+    print(f"\ntraced run ({eng.mode}+kv:{eng.cache_format}): "
+          f"{len(timeline)} records")
+    print(f"{'span':<18} {'count':>5} {'total ms':>9} {'p50 ms':>8}")
+    for name, s in sorted(obs.summarize_spans(timeline).items()):
+        print(f"{name:<18} {s['count']:>5} {s['total_s']*1e3:>9.1f} "
+              f"{s['p50_s']*1e3:>8.2f}")
+    print("kernel dispatches (trace-time call sites per compiled program):")
+    for key, count in sorted(obs.dispatch_table(timeline).items()):
+        labels = ",".join(f"{k}={v}" for k, v in key)
+        print(f"  {labels:<40} {count}")
 
 
 if __name__ == "__main__":

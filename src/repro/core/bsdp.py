@@ -103,6 +103,11 @@ def bsdp_matmul_planes(
     plane-pair sums, followed by the ``s_jk·2^{j+k}`` weighted reduction
     (tiny VPU epilogue).  Exact over integers.
     """
+    from repro.obs import trace as obs
+    if obs.active():
+        # same trace-time dispatch accounting as the Pallas wrappers in
+        # kernels/ops.py — this is the jnp form of the fused contraction
+        obs.counter("kernel.dispatch", kernel="gemm_fused", impl="jnp")
     xb = _bits_to_int8(x_planes)  # [M, 4, K] 0/1 int8
     wb = _bits_to_int8(w_planes)  # [N, 4, K] 0/1 int8
     # One fused contraction over K: [M,4,N,4] popcount table.

@@ -418,6 +418,9 @@ class BitPlaneCacheFormat(CacheFormat):
         [..., G, L]``; all three forms are integer-exact and
         interchangeable (``popcount`` / ``planes_gemm`` /
         ``planes_gemm_fused``)."""
+        from repro.obs import trace as obs  # deferred: kvcache loads early
+        if obs.active():
+            obs.counter("kernel.dispatch", kernel=kernel, fmt=self.name)
         if kernel == "popcount":
             return bsdp.bsdp_popcount(
                 q_planes[..., :, None, :, :], k_planes[..., None, :, :, :],

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kvcache
+from repro.obs import trace as obs
 
 #: flat-cache keys that live in the page pool under a paged format
 #: (payloads + per-page scales; leading dims [num_pages, page_size])
@@ -231,10 +232,16 @@ class PagePool:
     LIFO free list and refcounted use.  A page's refcount is the number of
     holders — one per block-table entry referencing it plus one when the
     radix prefix index retains it — so ``refs > 1`` means *shared* and a
-    write into it must copy first (COW).  Telemetry counters (COW copies,
-    evictions, prefix hits/tokens saved) feed ``ServeEngine.stats()`` and
-    the scheduler's :class:`~repro.serve.scheduler.EngineView` — eviction
-    policy is scheduler data, not engine code.
+    write into it must copy first (COW).  Telemetry is *lifetime*-scoped —
+    ``total_allocated``/``total_freed`` monotone counters plus the
+    ``peak_in_use`` high-water mark — so pool pressure between two
+    ``stats()`` calls is visible, not just the instantaneous snapshot; COW
+    copies, evictions and prefix hits are owned here too (the ``note_*``
+    methods), feeding ``ServeEngine.stats()``, the scheduler's
+    :class:`~repro.serve.scheduler.EngineView`, and the :mod:`repro.obs`
+    counter registry (``pages.alloc``/``pages.free``/``pages.cow``/
+    ``pages.evict`` counters, ``pages.occupancy``/``pages.high_water``
+    gauges) in one place.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -248,6 +255,13 @@ class PagePool:
         self.prefix_hits = 0
         self.prefix_tokens_saved = 0
         self.peak_in_use = 0
+        self.total_allocated = 0
+        self.total_freed = 0
+
+    def _note_occupancy(self) -> None:
+        if obs.active():
+            obs.gauge("pages.occupancy", self.pages_in_use)
+            obs.gauge("pages.high_water", self.peak_in_use)
 
     # -- occupancy -------------------------------------------------------
     def free_count(self) -> int:
@@ -275,7 +289,11 @@ class PagePool:
             )
         pages = np.array([self._free.pop() for _ in range(n)], np.int64)
         self.refs[pages] = 1
+        self.total_allocated += n
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        if obs.active():
+            obs.counter("pages.alloc", n)
+            self._note_occupancy()
         return pages
 
     def retain(self, pages) -> None:
@@ -295,9 +313,36 @@ class PagePool:
             if self.refs[p] == 0:
                 self._free.append(int(p))
                 freed.append(int(p))
+        if freed:
+            self.total_freed += len(freed)
+            if obs.active():
+                obs.counter("pages.free", len(freed))
+                self._note_occupancy()
         return freed
 
     # -- telemetry -------------------------------------------------------
+    def note_cow(self, n: int = 1) -> None:
+        """Record ``n`` copy-on-write page copies (engine calls this at the
+        divergent-write site, so the counter lives with the pool)."""
+        self.cow_copies += n
+        if obs.active():
+            obs.counter("pages.cow", n)
+
+    def note_eviction(self, n: int = 1) -> None:
+        """Record ``n`` prefix-index evictions forced by pool pressure."""
+        self.evictions += n
+        if obs.active():
+            obs.counter("pages.evict", n)
+
+    def note_prefix_hit(self, tokens_saved: int) -> None:
+        """Record one prefix-cache attach that skipped ``tokens_saved``
+        prefill positions."""
+        self.prefix_hits += 1
+        self.prefix_tokens_saved += int(tokens_saved)
+        if obs.active():
+            obs.counter("pages.prefix_hit")
+            obs.counter("pages.prefix_tokens_saved", int(tokens_saved))
+
     def stats(self) -> dict:
         return {
             "num_pages": self.num_pages,
@@ -305,6 +350,8 @@ class PagePool:
             "pages_in_use": self.pages_in_use,
             "pages_free": self.free_count(),
             "peak_in_use": self.peak_in_use,
+            "total_allocated": self.total_allocated,
+            "total_freed": self.total_freed,
             "shared_pages": self.shared_pages(),
             "shared_fraction": self.shared_fraction(),
             "cow_copies": self.cow_copies,

@@ -13,6 +13,14 @@ These handle everything the raw kernels require of their callers:
 
 Every wrapper has a matching oracle in :mod:`repro.kernels.ref` and a
 shape/dtype sweep test in ``tests/test_kernels_*.py``.
+
+Each wrapper also emits a ``kernel.dispatch`` counter (:mod:`repro.obs`)
+labelled with the kernel name and resolved block shape.  Because the
+wrappers run under ``jax.jit``, the counter fires at **trace time**: it
+counts kernel *call sites per compiled program*, not per-step executions —
+which is precisely the dispatch-cost artifact of the fused-kernel story
+(one compilation of the unrolled BSDP GEMM records 16 plane-pair
+dispatches where ``gemm_fused`` records 1).
 """
 
 from __future__ import annotations
@@ -25,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import bitplane
 from repro.core.quant import QuantTensor
+from repro.obs import trace as obs
 from repro.kernels import (
     bsdp_gemm,
     bsdp_kernel,
@@ -62,6 +71,13 @@ def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
     return jnp.pad(x, ((0, pm), (0, pn)))
 
 
+def _note_dispatch(kernel: str, *blocks: int) -> None:
+    """Count one kernel call site (trace-time under jit; see module doc)."""
+    if obs.active():
+        obs.counter("kernel.dispatch", kernel=kernel,
+                    blocks="x".join(str(b) for b in blocks))
+
+
 # ---------------------------------------------------------------------------
 # W8A8
 # ---------------------------------------------------------------------------
@@ -89,6 +105,7 @@ def quant_matmul(
     wd = _pad2(w.data, kp, np_)
     xs = _pad2(x.scale.reshape(m, 1), mp, 1)
     ws = _pad2(w.scale.reshape(1, n), 1, np_)
+    _note_dispatch("int8", bm, bn, bk)
     out = gemv_int8.matmul_int8(
         xd, wd, xs, ws, bm=bm, bn=bn, bk=bk,
         interpret=_interpret(interpret), out_int32=out_int32,
@@ -139,6 +156,7 @@ def quant_matmul_int4(
     wd = _pad2(w_packed, kp // 2, np_)
     xs = _pad2(x.scale.reshape(m, 1), mp, 1)
     ws = _pad2(w_scale.reshape(1, n), 1, np_)
+    _note_dispatch("int4_packed", bm, bn, bk)
     out = gemv_int4.matmul_int4_packed(
         xd, wd, xs, ws, bm=bm, bn=bn, bk=bk, interpret=_interpret(interpret)
     )
@@ -292,6 +310,7 @@ def bsdp_matmul_planes(
     def pad3(p, d0, d2):
         return jnp.pad(p, ((0, d0 - p.shape[0]), (0, 0), (0, d2 - p.shape[2])))
 
+    _note_dispatch(kernel, bm, bn, bkw)
     mod, attr = _BSDP_KERNEL_IMPLS[kernel]
     fn = getattr(mod, attr)
     out = fn(
@@ -356,6 +375,7 @@ def plane_decode_attention(
     all scales folded after the integer contraction.  The word-padded
     feature axis is sliced back to ``feat`` here.
     """
+    _note_dispatch("plane_attn", k_planes.shape[1], feat)
     out = plane_attn.plane_decode_attention(
         q_planes, q_scale, k_planes, k_scale, v_planes, v_scale, bias,
         sm_scale=sm_scale, interpret=_interpret(interpret),
@@ -385,6 +405,7 @@ def dim_matmul(
     bn = bn or _pick_block(n, 128, 128)
     bk = bk or _pick_block(k, 256, 128)
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    _note_dispatch("w16a8_dim", bm, bn, bk)
     out = dim_kernel.matmul_w16a8(
         _pad2(x_i8, mp, kp),
         _pad2(w_i16, kp, np_),
@@ -415,6 +436,7 @@ def weight_only_matmul(
     bn = bn or _pick_block(n, 128, 128)
     bk = bk or _pick_block(k, 512, 128)
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    _note_dispatch("w8a16_dequant", bm, bn, bk)
     out = dequant_gemv.dequant_matmul(
         _pad2(x, mp, kp),
         _pad2(w.data, kp, np_),

@@ -418,6 +418,26 @@ def analytic_cache_bytes(cfg, batch: int, cache_len: int, *, tp: int = 1) -> int
     return total
 
 
+def analytic_weight_bytes(cfg, spec, *, tp: int = 1, min_dim: int = 64,
+                          rules=None) -> int:
+    """Resident weight bytes for one residency policy, with no weights.
+
+    Walks the abstract ``_serve_params`` tree (the same
+    :func:`abstract_quant` conversion the engine applies for real) and
+    sums leaf bytes — byte-exact against
+    ``ServeEngine.resident_bytes()["weights"]`` for the same ``(cfg, spec,
+    min_dim)``, which the obs byte-gauge test asserts: the traced
+    ``bytes.weights`` gauge, the engine accounting and this analytic twin
+    must all agree to the byte.
+    """
+    spec_tree = model_lib.specs(cfg, tp)
+    abs_tree, _ = _serve_params(
+        spec_tree, spec, rules if rules is not None else P.base_rules(),
+        min_dim=min_dim)
+    return sum(residency._nbytes(a)
+               for a in jax.tree_util.tree_leaves(abs_tree))
+
+
 def _cache_bytes_local(cfg, cell, tp, mesh_axes) -> float:
     """Per-device decode-cache bytes, derived from the cache-format
     registry: each channel comes from the format's ``abstract_state``

@@ -21,6 +21,13 @@ fails fast with the registered list:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --mode 'ffn=bsdp,mixer=w8a16,default=w8a8' --cache-format int4_bp \
         --scheduler token_budget:budget=16
+
+Observability (:mod:`repro.obs`, the fifth registry concept) wires in via
+``--trace out.json`` (Chrome-trace/Perfetto export of the whole run:
+step-loop spans, kernel dispatch counters, page-pool gauges, request
+lifecycle instants — load it at https://ui.perfetto.dev, or validate with
+``python -m repro.obs.validate out.json``) and ``--stats-every N`` (one
+serving stats line to stderr every N engine steps).
 """
 
 from __future__ import annotations
@@ -31,6 +38,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.core import kvcache, residency
@@ -89,7 +97,19 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export the run as a Chrome-trace/Perfetto JSON "
+                         "(spans, counters, request lifecycle) to this path")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print one serving stats line to stderr every N "
+                         "engine steps (0 = off)")
     args = ap.parse_args()
+
+    trace_sink = None
+    if args.trace:
+        trace_sink = obs.register_sink(obs.ChromeTraceSink(args.trace))
+    if args.stats_every > 0:
+        obs.register_sink(obs.StatsLineSink(every=args.stats_every))
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.is_enc_dec or cfg.family == "vlm":
@@ -139,6 +159,11 @@ def main():
           f"{ms(st.percentile('ttft_s', 95))}  "
           f"TPOT p50: {ms(st.percentile('tpot_s', 50))}  "
           f"(ttft_work p95: {st.percentile('ttft_work', 95):.0f} positions)")
+
+    if trace_sink is not None:
+        trace_sink.close()
+        print(f"trace: {len(trace_sink)} records → {args.trace} "
+              "(chrome://tracing / ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

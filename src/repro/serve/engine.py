@@ -41,6 +41,16 @@ Requests are lifecycle objects (``QUEUED → PREFILLING → DECODING → DONE |
 CANCELLED``) with per-token streaming callbacks and three-clock SLO stamps
 (wall seconds / engine steps / processed-position work units) surfaced by
 :meth:`ServeEngine.stats`.
+
+The whole step loop is instrumented through :mod:`repro.obs` — the fifth
+registry concept: each ``step()`` decomposes into ``engine.plan`` /
+``reserve`` / ``cow`` / ``prefill`` / ``decode`` / ``complete`` spans,
+request lifecycle stamps double as ``request.*`` instant events (uid →
+TTFT/TPOT derivable from the trace alone, value-identical to ``stats()``),
+and resident weight/cache bytes are gauged per step from the same registry
+accounting the dry-run twins predict.  ``ServeEngine(..., trace=True)``
+retains it all in a ring (:meth:`ServeEngine.timeline`); with no sink
+registered, every site is a single-branch no-op.
 """
 
 from __future__ import annotations
@@ -55,6 +65,7 @@ import numpy as np
 
 from repro.core import kvcache, paging, qlinear, residency
 from repro.models import model as model_lib
+from repro.obs import trace as obs
 from repro.serve import scheduler as sched_lib
 from repro.serve.scheduler import (
     CANCELLED,
@@ -248,6 +259,7 @@ class ServeEngine:
         scheduler: sched_lib.SchedulerLike = "fcfs",
         min_dim: int = 64,
         trace_logits: bool = False,
+        trace: bool = False,
         page_pool_pages: Optional[int] = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
@@ -316,6 +328,18 @@ class ServeEngine:
         self.work = 0          # processed batch positions (analytic clock)
         self.wall_s = 0.0      # seconds spent inside step()
         self._total_tokens = 0
+        # -- observability (fifth registry concept) -----------------------
+        # trace=True registers a per-engine RingSink: spans/counters emitted
+        # anywhere in the stack during this engine's steps land in
+        # ``timeline()``.  With trace=False the engine still instruments —
+        # an externally registered sink (e.g. launch/serve.py --trace) sees
+        # the same stream; with NO sink registered every site is the
+        # zero-overhead disabled path.
+        self._ring: Optional[obs.RingSink] = None
+        if trace:
+            self._ring = obs.register_sink(
+                obs.RingSink() if trace is True else trace)
+        self._weight_bytes: Optional[int] = None  # gauged lazily per step
 
         self._decode = jax.jit(
             lambda p, tok, caches, pos: model_lib.decode_step(
@@ -358,11 +382,33 @@ class ServeEngine:
         req.arrival = self._stamp()
         self.queue.append(req)
         self.requests.append(req)
+        if obs.active():
+            obs.counter("sched.admit", scheduler=self.scheduler.name)
+            self._note_lifecycle("request.arrival", req, req.arrival)
         return req
 
     # -- bookkeeping helpers --------------------------------------------
     def _stamp(self) -> Stamp:
         return Stamp(self._clock(), self.step_index, self.work)
+
+    def _note_lifecycle(self, name: str, req: Request, stamp: Stamp) -> None:
+        """Emit one request-lifecycle instant carrying the EXACT stamp the
+        engine recorded — :func:`repro.obs.metrics.request_stats_from_events`
+        rebuilds TTFT/TPOT from these, value-identical to the Stamp path."""
+        obs.event(name, uid=req.uid, state=req.state, t=stamp.time,
+                  step=stamp.step, work=stamp.work,
+                  prompt_len=req.prompt_len, new_tokens=len(req.out))
+
+    def timeline(self) -> list:
+        """All obs records retained by this engine's ring sink (requires
+        ``trace=True`` at construction): span/point records in emission
+        order — feed to :func:`repro.obs.export.chrome_trace`,
+        :func:`repro.obs.metrics.summarize_spans` or
+        :func:`repro.obs.metrics.dispatch_table`."""
+        if self._ring is None:
+            raise RuntimeError(
+                "timeline() requires ServeEngine(..., trace=True)")
+        return self._ring.records()
 
     def _view(self) -> EngineView:
         return EngineView(
@@ -383,14 +429,21 @@ class ServeEngine:
         tok = self._next_token(req, logits_row)
         req.out.append(tok)
         self._total_tokens += 1
+        if obs.active():
+            obs.counter("engine.tokens")
         if req.first_token is None:
             req.first_token = self._stamp()
+            if obs.active():
+                self._note_lifecycle("request.first_token", req,
+                                     req.first_token)
         if req.on_token is not None:
             req.on_token(req, tok)
 
     def _finish(self, req: Request, slot: Optional[int], state: str) -> None:
         req.state = state
         req.finished = self._stamp()
+        if obs.active():
+            self._note_lifecycle("request.finished", req, req.finished)
         if slot is not None:
             self.active[slot] = None
             if self._paged and self._table_valid[slot]:
@@ -429,7 +482,7 @@ class ServeEngine:
                 if page is None:
                     raise
                 self.page_pool.release([page])
-                self.page_pool.evictions += 1
+                self.page_pool.note_eviction()
 
     def _try_attach_prefix(self, slot: int, req: Request) -> bool:
         """Map the request's leading block-table entries onto the physical
@@ -477,8 +530,7 @@ class ServeEngine:
         self.pos[slot] = n_tok
         req.prefilled = n_tok
         req.state = PREFILLING
-        self.page_pool.prefix_hits += 1
-        self.page_pool.prefix_tokens_saved += n_tok
+        self.page_pool.note_prefix_hit(n_tok)
         return True
 
     def _register_prefix(self, slot: int, req: Request) -> None:
@@ -518,7 +570,7 @@ class ServeEngine:
                 self._tables[slot, j] = new
                 self._shared_mask[slot, j] = False
                 self.page_pool.release([old])
-                self.page_pool.cow_copies += 1
+                self.page_pool.note_cow()
         if not ops:
             return
         slots_a = jnp.asarray([o[0] for o in ops], jnp.int32)
@@ -642,6 +694,9 @@ class ServeEngine:
         scatter).  Rows are batch-independent through every layer, so mixed
         chunk+decode batches are numerically identical to running them
         separately.
+
+        Returns the ``(request, slot)`` pairs that hit ``max_new`` this
+        step; the caller finishes them under the ``engine.complete`` span.
         """
         s_len = max([n for _, n in chunks], default=1)
         toks = np.zeros((self.slots, s_len), np.int32)
@@ -673,46 +728,56 @@ class ServeEngine:
             self.logit_trace.append(
                 ("decode", tuple(decode_slots), step_logits[list(decode_slots)])
             )
+        finished = []
         for slot in decode_slots:
             req = self.active[slot]
             self._emit(req, step_logits[slot])
             self.pos[slot] += 1
             if len(req.out) >= req.max_new:
-                self._finish(req, slot, DONE)
+                finished.append((req, slot))
+        return finished
 
     def _execute(self, plan: StepPlan) -> bool:
         """Run one validated :class:`StepPlan`; returns progress."""
         refills = []
         attached = 0
         starved = False
-        for slot, req, n in plan.refills:
-            if self.active[slot] is not None:
-                raise ValueError(f"plan refills occupied slot {slot}")
-            if req not in self.queue:
-                raise ValueError(f"plan refills unqueued request {req.uid}")
-            self.queue.remove(req)
-            try:
-                if self._try_attach_prefix(slot, req):
-                    attached += 1  # prefix mapped; chunks do the suffix
-                    continue
-                if self._paged:
-                    # reserve physical pages up front; under pool pressure
-                    # the request waits (live slots free pages as they
-                    # finish, and a registered prefix may let it attach)
-                    self._tables[slot] = self._alloc_pages(self._npp)
-                    self._table_valid[slot] = True
-                    self._shared_mask[slot] = False
-            except paging.PoolExhausted:
-                self.queue.insert(0, req)
-                starved = True
-                break
-            refills.append((slot, req, min(n, len(req.prompt))))
+        with obs.span("engine.reserve", refills=len(plan.refills)):
+            for slot, req, n in plan.refills:
+                if self.active[slot] is not None:
+                    raise ValueError(f"plan refills occupied slot {slot}")
+                if req not in self.queue:
+                    raise ValueError(
+                        f"plan refills unqueued request {req.uid}")
+                self.queue.remove(req)
+                try:
+                    if self._try_attach_prefix(slot, req):
+                        attached += 1  # prefix mapped; chunks do the suffix
+                        continue
+                    if self._paged:
+                        # reserve physical pages up front; under pool
+                        # pressure the request waits (live slots free pages
+                        # as they finish, and a registered prefix may let
+                        # it attach)
+                        self._tables[slot] = self._alloc_pages(self._npp)
+                        self._table_valid[slot] = True
+                        self._shared_mask[slot] = False
+                except paging.PoolExhausted:
+                    self.queue.insert(0, req)
+                    if obs.active():
+                        obs.counter("sched.requeue",
+                                    scheduler=self.scheduler.name)
+                    starved = True
+                    break
+                refills.append((slot, req, min(n, len(req.prompt))))
         if refills:
-            if self._pad_ok:
-                self._prefill_slots(refills)
-            else:  # SSM state cannot skip pad tokens: refill per slot
-                for one in refills:
-                    self._prefill_slots([one])
+            with obs.span("engine.prefill", slots=len(refills),
+                          tokens=sum(n for _, _, n in refills)):
+                if self._pad_ok:
+                    self._prefill_slots(refills)
+                else:  # SSM state cannot skip pad tokens: refill per slot
+                    for one in refills:
+                        self._prefill_slots([one])
         chunks = [
             (slot, min(n, self.active[slot].prompt_len
                        - self.active[slot].prefilled))
@@ -726,12 +791,22 @@ class ServeEngine:
         )
         if chunks or decode_slots:
             if self._paged:
-                self._cow_writes(
-                    [(slot, range(self.active[slot].prefilled,
-                                  self.active[slot].prefilled + n))
-                     for slot, n in chunks]
-                    + [(s, (self.pos[s],)) for s in decode_slots])
-            self._chunk_decode(chunks, decode_slots)
+                with obs.span("engine.cow"):
+                    self._cow_writes(
+                        [(slot, range(self.active[slot].prefilled,
+                                      self.active[slot].prefilled + n))
+                         for slot, n in chunks]
+                        + [(s, (self.pos[s],)) for s in decode_slots])
+            with obs.span("engine.decode", chunks=len(chunks),
+                          decode=len(decode_slots)):
+                finished = self._chunk_decode(chunks, decode_slots)
+            if finished:
+                # finishes deferred out of the decode loop so slot frees,
+                # page releases and scheduler.on_complete callbacks group
+                # under one span (same slot order as the emit loop)
+                with obs.span("engine.complete", n=len(finished)):
+                    for req, slot in finished:
+                        self._finish(req, slot, DONE)
         progress = bool(refills or attached or chunks or decode_slots)
         if starved and not progress:
             # nothing live to ever free a page: the pool cannot hold even
@@ -747,9 +822,13 @@ class ServeEngine:
         (empty queue and no live slots — or a scheduler that planned no
         work while work exists, which ``run()`` treats as termination)."""
         t0 = self._clock()
-        self._sweep_terminal()
-        plan = self.scheduler.plan(self._view())
-        progressed = self._execute(plan)
+        with obs.span("engine.step", step=self.step_index):
+            self._sweep_terminal()
+            with obs.span("engine.plan"):
+                plan = self.scheduler.plan(self._view())
+            progressed = self._execute(plan)
+            if obs.active():
+                self._note_resident_gauges()
         self.step_index += 1
         self.wall_s += self._clock() - t0
         return progressed
@@ -757,6 +836,18 @@ class ServeEngine:
     def run(self):
         while self.step():
             pass
+
+    def _note_resident_gauges(self) -> None:
+        """Gauge the live resident-byte twins.  Both values are the same
+        registry-derived accounting :meth:`resident_bytes` reports, so the
+        tier-1 byte-exactness test can assert the traced gauges against
+        ``dryrun.analytic_cache_bytes`` / ``abstract_quant`` byte-for-byte."""
+        if self._weight_bytes is None:
+            self._weight_bytes = resident_bytes(self.params)
+        obs.gauge("bytes.weights", self._weight_bytes)
+        if self.caches is not None:
+            obs.gauge("bytes.cache",
+                      kvcache.cache_resident_bytes(self.caches))
 
     # -- SLO surface ----------------------------------------------------
     def stats(self) -> EngineStats:

@@ -149,18 +149,38 @@ class TestBenchSmoke:
         # the prefix_cache scheduler row joined the per-policy ladder too
         assert "gemv_e2e/sched_prefix_cache," in smoke_output
 
+    def test_trace_overhead_row_present(self, smoke_output):
+        """The observability overhead guard: serving with a ring sink
+        retaining every span/counter must keep ≥ 0.9× the throughput of
+        the zero-overhead disabled path (same workload, warmed up)."""
+        line = next(
+            l for l in smoke_output.splitlines()
+            if l.startswith("gemv_e2e/trace_overhead,"))
+        fields = dict(kv.split("=") for kv in line.split(",", 2)[2].split(";"))
+        assert int(fields["records"]) > 0, line
+        assert float(fields["ratio"]) >= 0.9, line
+
     def test_checked_in_bench_json_matches_contract(self):
         """BENCH_smoke.json (written by ``benchmarks/run.py --smoke
         --json``) is checked in as the row contract: every required ladder
-        row name must be present with parseable fields.  Timings are
-        container noise — names and derived keys are the contract."""
+        row name must be present with parseable fields.  Timings and the
+        provenance block are container noise — names and derived keys are
+        the contract."""
         import json
 
         with open(os.path.join(REPO, "BENCH_smoke.json")) as f:
-            rows = json.load(f)
+            doc = json.load(f)
+        # {"provenance": {...}, "rows": [...]} since the provenance stamp;
+        # a bare list is the pre-provenance artifact shape
+        rows = doc["rows"] if isinstance(doc, dict) else doc
+        if isinstance(doc, dict):
+            prov = doc["provenance"]
+            for key in ("git_sha", "jax_version", "backend", "hostname",
+                        "timestamp_utc"):
+                assert isinstance(prov.get(key), str) and prov[key], prov
         names = {r["name"] for r in rows}
         required = {
-            "gemv_e2e/mixed_residency",
+            "gemv_e2e/mixed_residency", "gemv_e2e/trace_overhead",
             "gemv_e2e/sched_fcfs", "gemv_e2e/sched_sjf",
             "gemv_e2e/sched_token_budget", "gemv_e2e/sched_prefix_cache",
             "gemv_e2e/sched_prefix_unpaged", "gemv_e2e/sched_prefix_paged",

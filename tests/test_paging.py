@@ -84,8 +84,29 @@ class TestPagePool:
         assert st["pages_in_use"] == 1 and st["pages_free"] == 3
         for key in ("peak_in_use", "shared_pages", "shared_fraction",
                     "cow_copies", "evictions", "prefix_hits",
-                    "prefix_tokens_saved"):
+                    "prefix_tokens_saved", "total_allocated", "total_freed"):
             assert key in st
+
+    def test_lifetime_alloc_free_totals(self):
+        """stats() distinguishes lifetime churn (total_allocated /
+        total_freed monotonically increasing) from instantaneous occupancy
+        (pages_in_use) and its high-water mark (peak_in_use)."""
+        pool = paging.PagePool(8, 4)
+        a = pool.alloc(5)
+        pool.release(a[:3])
+        pool.alloc(2)
+        st = pool.stats()
+        assert st["total_allocated"] == 7
+        assert st["total_freed"] == 3
+        assert st["pages_in_use"] == 4
+        assert st["peak_in_use"] == 5
+        # note_* hooks feed the same lifetime surface
+        pool.note_cow()
+        pool.note_eviction(2)
+        pool.note_prefix_hit(12)
+        st = pool.stats()
+        assert st["cow_copies"] == 1 and st["evictions"] == 2
+        assert st["prefix_hits"] == 1 and st["prefix_tokens_saved"] == 12
 
 
 class TestRadixPrefixIndex:
